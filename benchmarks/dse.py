@@ -1,0 +1,72 @@
+"""Design-space exploration of oPCM VCores (paper §VI-C future work).
+
+The paper evaluates ONE fixed configuration (256x256 tiles, K=16,
+fixed laser) citing limited component specs. The cost model makes the
+sweep cheap: crossbar geometry x WDM capacity x laser power, reporting
+per-image latency, energy, and the transmitter/TIA overhead share —
+the pareto the paper asks for.
+
+    PYTHONPATH=src python -m benchmarks.dse
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import costmodel as cm
+from repro.core.networks import NETWORKS
+
+
+def explore(net_name: str = "CNN-M"):
+    net = NETWORKS[net_name]
+    rows = []
+    for size in (128, 256, 512):
+        for k in (4, 8, 16, 32):
+            for laser in (100.0, 200.0, 400.0):
+                tile = dataclasses.replace(
+                    cm.EINSTEINBARRIER.tile, rows=size, cols=size, wdm_k=k
+                )
+                p = dataclasses.replace(cm.EINSTEINBARRIER, tile=tile, p_laser_mw=laser)
+                lat = cm.network_latency_s(p, net)
+                en = cm.network_energy_j(p, net)
+                tx_mw = cm.transmitter_power_mw(p)
+                rows.append({
+                    "size": size, "k": k, "laser_mw": laser,
+                    "latency_us": lat * 1e6, "energy_uj": en * 1e6,
+                    "tx_power_w": tx_mw / 1e3,
+                })
+    return rows
+
+
+def pareto(rows):
+    """3-objective front: latency, energy, AND transmitter wall power —
+    Eq. 3 grows ~K*M, so 'fastest' configs carry real power budgets."""
+    keys = ("latency_us", "energy_uj", "tx_power_w")
+
+    def dominates(o, r):
+        return all(o[k] <= r[k] for k in keys) and any(o[k] < r[k] for k in keys)
+
+    out = [r for r in rows if not any(dominates(o, r) for o in rows)]
+    return sorted(out, key=lambda r: r["latency_us"])
+
+
+def main() -> int:
+    rows = explore()
+    front = pareto(rows)
+    print("\n== oPCM VCore design-space exploration (CNN-M) ==")
+    print(f"{len(rows)} design points; pareto front (latency vs energy):")
+    print(f"{'tile':>6s} {'K':>4s} {'laser':>7s} {'lat_us':>8s} {'E_uJ':>8s} {'tx_W':>6s}")
+    for r in front:
+        print(f"{r['size']:4d}^2 {r['k']:4d} {r['laser_mw']:5.0f}mW "
+              f"{r['latency_us']:8.3f} {r['energy_uj']:8.3f} {r['tx_power_w']:6.1f}")
+    # structural sanity: bigger K never hurts latency; bigger tiles
+    # amortize edge layers but raise transmitter power (Eq. 3 ~ K*M)
+    base = [r for r in rows if r["size"] == 256 and r["laser_mw"] == 200.0]
+    lat_by_k = {r["k"]: r["latency_us"] for r in base}
+    ok = lat_by_k[32] <= lat_by_k[16] <= lat_by_k[8] <= lat_by_k[4]
+    print(f"  [{'PASS' if ok else 'FAIL'}] latency monotone non-increasing in K (fixed tile)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

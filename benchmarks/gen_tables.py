@@ -1,0 +1,53 @@
+"""Inject the generated §Roofline/§Dry-run tables into EXPERIMENTS.md
+(replaces everything after the ROOFLINE_TABLE marker line).
+
+    PYTHONPATH=src python -m benchmarks.gen_tables
+"""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import HEADER, fmt_row, load
+
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def table_md(recs: list[dict]) -> str:
+    lines = [HEADER]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["multi_pod"])):
+        lines.append(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    doms: dict[str, int] = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    skips = len([r for r in recs if r["status"] == "skipped"])
+    errs = len([r for r in recs if r["status"] == "error"])
+    lines.append("")
+    lines.append(
+        f"**{len(ok)} cells compile+analyze, {errs} errors, {skips} documented "
+        f"skips. Dominant-term histogram: {doms}.**"
+    )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    recs = load("runs/dryrun")
+    if not recs:
+        print("no records; run repro.launch.dryrun first")
+        return 1
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    head, tail = doc.split(MARKER, 1)
+    # preserve everything from the first section break after the marker
+    cut = tail.find("\n---")
+    rest = tail[cut:] if cut != -1 else ""
+    doc = head + MARKER + "\n\n" + table_md(recs) + rest
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print(f"injected {len(recs)} records into EXPERIMENTS.md")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

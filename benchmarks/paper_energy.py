@@ -1,0 +1,61 @@
+"""Fig. 8 reproduction: normalized energy vs Baseline-ePCM.
+
+Paper claims:
+  * TacitMap-ePCM ~5.35x MORE energy (ADCs vs sense amps)
+  * EinsteinBarrier ~1.56x LESS than Baseline-ePCM
+    (~11.94x less than TacitMap-ePCM)
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.core import costmodel as cm
+from repro.core.networks import NETWORKS
+
+
+def run() -> dict:
+    rows = []
+    for name, net in NETWORKS.items():
+        r = cm.evaluate_all(net)
+        base = r["Baseline-ePCM"]["energy_j"]
+        rows.append({
+            "network": name,
+            "baseline_j": base,
+            "tm_ratio": r["TacitMap-ePCM"]["energy_j"] / base,     # >1 = worse
+            "eb_ratio": r["EinsteinBarrier"]["energy_j"] / base,   # <1 = better
+        })
+    tm = [r["tm_ratio"] for r in rows]
+    eb = [r["eb_ratio"] for r in rows]
+    summary = {
+        "tm_avg_ratio": statistics.mean(tm),
+        "eb_avg_ratio": statistics.mean(eb),
+        "tm_over_eb": statistics.mean(t / e for t, e in zip(tm, eb)),
+    }
+    checks = {
+        "tm ~5.35x worse (band 3.5-7.5)": 3.5 <= summary["tm_avg_ratio"] <= 7.5,
+        "eb ~1.56x better (band 1.2-2.2)": 1.2 <= 1 / summary["eb_avg_ratio"] <= 2.2,
+        "eb ~11.94x better than tm (band 7-18)": 7 <= summary["tm_over_eb"] <= 18,
+    }
+    return {"rows": rows, "summary": summary, "checks": checks}
+
+
+def main() -> int:
+    out = run()
+    print("\n== Fig. 8: energy normalized to Baseline-ePCM ==")
+    print(f"{'network':8s} {'TacitMap-ePCM':>14s} {'EinsteinBarrier':>16s}")
+    for r in out["rows"]:
+        print(f"{r['network']:8s} {r['tm_ratio']:13.2f}x {r['eb_ratio']:15.3f}x")
+    s = out["summary"]
+    print(f"\nTacitMap avg {s['tm_avg_ratio']:.2f}x worse (paper ~5.35x)")
+    print(f"EinsteinBarrier avg {1/s['eb_avg_ratio']:.2f}x better (paper ~1.56x); "
+          f"{s['tm_over_eb']:.1f}x better than TacitMap (paper ~11.94x)")
+    ok = True
+    for name, passed in out["checks"].items():
+        print(f"  [{'PASS' if passed else 'FAIL'}] {name}")
+        ok &= passed
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

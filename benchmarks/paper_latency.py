@@ -1,0 +1,74 @@
+"""Fig. 7 reproduction: normalized latency improvement over Baseline-ePCM
+for the 6 BNN workloads, all four designs.
+
+Paper claims checked (tolerance bands — device constants are calibrated,
+see DESIGN.md §3):
+  * TacitMap-ePCM:    up to ~154x, average ~78x
+  * EinsteinBarrier:  ~22x … ~3113x, average ~1205x
+  * EinsteinBarrier ~15x over TacitMap-ePCM
+  * Baseline-ePCM vs GPU is mixed: faster on small CNNs, ~27x slower on MLP-L
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.core import costmodel as cm
+from repro.core.networks import NETWORKS
+
+
+def run() -> dict:
+    rows = []
+    for name, net in NETWORKS.items():
+        r = cm.evaluate_all(net)
+        base = r["Baseline-ePCM"]["latency_s"]
+        rows.append({
+            "network": name,
+            "baseline_s": base,
+            "tm_speedup": base / r["TacitMap-ePCM"]["latency_s"],
+            "eb_speedup": base / r["EinsteinBarrier"]["latency_s"],
+            "gpu_speedup": base / r["Baseline-GPU"]["latency_s"],
+        })
+    tm = [r["tm_speedup"] for r in rows]
+    eb = [r["eb_speedup"] for r in rows]
+    summary = {
+        "tm_avg": statistics.mean(tm),
+        "tm_max": max(tm),
+        "eb_avg": statistics.mean(eb),
+        "eb_max": max(eb),
+        "eb_min": min(eb),
+        "eb_over_tm_avg": statistics.mean(e / t for e, t in zip(eb, tm)),
+    }
+    checks = {
+        "tm_max ~154x (band 100-200)": 100 <= summary["tm_max"] <= 200,
+        "tm_avg ~78x (band 50-110)": 50 <= summary["tm_avg"] <= 110,
+        "eb_max ~3113x (band 2000-4000)": 2000 <= summary["eb_max"] <= 4000,
+        "eb_avg ~1205x (band 800-1900)": 800 <= summary["eb_avg"] <= 1900,
+        "eb/tm ~15x (band 10-22)": 10 <= summary["eb_over_tm_avg"] <= 22,
+        "gpu mixed vs baseline (obs. 4)": any(r["gpu_speedup"] < 1 for r in rows)
+        and any(r["gpu_speedup"] > 1 for r in rows),
+    }
+    return {"rows": rows, "summary": summary, "checks": checks}
+
+
+def main() -> int:
+    out = run()
+    print("\n== Fig. 7: latency improvement over Baseline-ePCM ==")
+    print(f"{'network':8s} {'TacitMap-ePCM':>14s} {'EinsteinBarrier':>16s} {'GPU':>8s}")
+    for r in out["rows"]:
+        print(f"{r['network']:8s} {r['tm_speedup']:13.1f}x {r['eb_speedup']:15.1f}x "
+              f"{r['gpu_speedup']:7.2f}x")
+    s = out["summary"]
+    print(f"\nTacitMap avg {s['tm_avg']:.0f}x (paper ~78x), max {s['tm_max']:.0f}x (paper ~154x)")
+    print(f"EinsteinBarrier avg {s['eb_avg']:.0f}x (paper ~1205x), "
+          f"max {s['eb_max']:.0f}x (paper ~3113x)")
+    print(f"EB over TM avg {s['eb_over_tm_avg']:.1f}x (paper ~15x)")
+    ok = True
+    for name, passed in out["checks"].items():
+        print(f"  [{'PASS' if passed else 'FAIL'}] {name}")
+        ok &= passed
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

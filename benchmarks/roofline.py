@@ -1,0 +1,79 @@
+"""Roofline report (deliverable g): reads the dry-run JSON records and
+emits the per-(arch x shape x mesh) three-term table as markdown.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--runs runs/dryrun] [--md]
+
+Terms (TPU v5e): compute = FLOPs/(chips*197e12); memory =
+bytes/(chips*819e9); collective = coll_bytes/(chips*50e9). The perf
+iteration log lives in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(runs_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(runs_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {'mp' if r['multi_pod'] else 'sp'} | "
+                f"skip | — | — | — | — | — | {r['reason'][:40]} |")
+    if r["status"] == "error":
+        return (f"| {r['arch']} | {r['shape']} | {'mp' if r['multi_pod'] else 'sp'} | "
+                f"ERROR | — | — | — | — | — | {r['error'][:60]} |")
+    t = r["roofline"]
+    mem_gib = r["memory"]["peak_per_device_bytes"] / 2**30
+    ratio = r.get("useful_flop_ratio")
+    ratio_s = f"{ratio:.2f}" if ratio else "—"
+    name = r["arch"] + (f" ({r['quant']})" if r.get("quant", "none") != "none" else "")
+    return (
+        f"| {name} | {r['shape']} | {'mp' if r['multi_pod'] else 'sp'} | ok "
+        f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+        f"| **{t['dominant'][:4]}** | {mem_gib:.2f} | {ratio_s} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | st | compute (s) | memory (s) | collective (s) "
+    "| dom | GiB/dev | 6ND/HLO |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", default="runs/dryrun")
+    args = ap.parse_args()
+    recs = load(args.runs)
+    if not recs:
+        print(f"[roofline] no records under {args.runs} — run "
+              "`python -m repro.launch.dryrun` first")
+        return 0
+    print("\n== Roofline (from compiled dry-run artifacts) ==")
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    err = [r for r in recs if r["status"] == "error"]
+    print(f"\n{len(ok)} ok, {len(err)} errors, "
+          f"{len([r for r in recs if r['status'] == 'skipped'])} documented skips")
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"dominant-term histogram: {doms}")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""Benchmark driver — one section per paper table/figure plus the
+framework-level reports.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  1. paper_latency  — Fig. 7 (latency, 4 designs x 6 BNNs) + band checks
+  2. paper_energy   — Fig. 8 (energy) + band checks
+  3. kernel_bench   — packed XNOR matmul (TPU TacitMap) traffic/exactness
+  4. wdm_sweep      — WDM capacity K sweep (Eq. 2/3 overheads vs
+                      step-count win — the paper's §IV-B trade-off)
+  5. multilevel     — multi-level PCM cells vs noise (§VI-C future work)
+  6. dse            — oPCM VCore design-space pareto (§VI-C future work)
+  7. roofline       — §Roofline table from dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+
+def wdm_sweep() -> int:
+    import dataclasses
+
+    from repro.core import costmodel as cm
+    from repro.core.networks import NETWORKS
+
+    print("\n== WDM capacity sweep (EinsteinBarrier, CNN-M) ==")
+    print(f"{'K':>4s} {'latency_us/img':>15s} {'energy_uJ/img':>14s} {'tx_power_mW':>12s}")
+    net = NETWORKS["CNN-M"]
+    for k in (1, 2, 4, 8, 16, 32):
+        tile = dataclasses.replace(cm.EINSTEINBARRIER.tile, wdm_k=k)
+        p = dataclasses.replace(cm.EINSTEINBARRIER, tile=tile)
+        lat = cm.network_latency_s(p, net) * 1e6
+        en = cm.network_energy_j(p, net) * 1e6
+        tx = cm.transmitter_power_mw(p)
+        print(f"{k:4d} {lat:15.2f} {en:14.3f} {tx:12.0f}")
+    print("(K=16 is the paper's technology limit [13]; transmitter power grows "
+          "~linearly in K*M — Eq. 3)")
+    return 0
+
+
+def main() -> int:
+    import glob
+
+    from benchmarks import dse, kernel_bench, multilevel, paper_energy, paper_latency, roofline
+
+    rc = 0
+    rc |= paper_latency.main()
+    rc |= paper_energy.main()
+    rc |= kernel_bench.main()
+    rc |= wdm_sweep()
+    rc |= multilevel.main()
+    rc |= dse.main()
+    if glob.glob("runs/dryrun/*.json"):
+        rc |= roofline.main()
+    else:
+        print("\n[roofline] skipped — no runs/dryrun/*.json (run repro.launch.dryrun)")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+import sys
+from pathlib import Path
+
+# make `src/repro` importable and tests/proptest.py reachable from test files
+ROOT = Path(__file__).parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tests"))

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a BNN (the paper's workload class) with
+latent-weight STE training, then deploy it through all three execution
+engines and the cost model — training -> mapping -> accelerator
+latency/energy, the full pipeline of the paper.
+
+    PYTHONPATH=src python examples/train_bnn.py [--steps 300]
+
+The model is the MLP-S class (784-500-250-10) from the paper's MlBench
+suite, trained on the class-conditional synthetic MNIST stand-in from
+repro.data (offline container — no dataset downloads), hidden layers
+binarized with straight-through estimators, first/last layers
+high-precision (§II-B of the paper).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import model as bnn_model
+from repro.core.networks import MLP_S
+from repro.data import bnn_image_batch
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = bnn_model.MLPConfig(dims=(784, 500, 250, 10))
+    params = bnn_model.init_mlp(jax.random.key(0), cfg)
+    opt_cfg = OptConfig(weight_decay=0.0)
+    opt = adamw_init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = bnn_model.mlp_forward_train(p, x, cfg)
+            onehot = jax.nn.one_hot(y, 10)
+            return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(grads, params, opt, args.lr, opt_cfg)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        x, y = bnn_image_batch(args.batch, shape=(28, 28, 1), step=i)
+        params, opt, loss = step(params, opt, x.reshape(args.batch, -1), y)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f}")
+    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+
+    # -- eval through every execution engine --------------------------------
+    x, y = bnn_image_batch(512, shape=(28, 28, 1), step=10_000)
+    x = x.reshape(512, -1)
+    for engine in ("reference", "tacitmap", "wdm"):
+        logits = bnn_model.mlp_forward_infer(params, x, cfg, engine=engine)
+        acc = float(jnp.mean((jnp.argmax(logits, -1) == y)))
+        print(f"engine={engine:9s} accuracy {acc:.3f}")
+
+    # -- what the accelerator buys you (the paper's Fig. 7/8 for this net) --
+    r = cm.evaluate_all(MLP_S)
+    base = r["Baseline-ePCM"]
+    print("\nprojected deployment (per image, batch-16 stream):")
+    for name, v in r.items():
+        sp = base["latency_s"] / v["latency_s"]
+        print(f"  {name:16s} {v['latency_s']*1e6:9.2f} us  {v['energy_j']*1e9:9.1f} nJ  "
+              f"({sp:7.1f}x vs Baseline-ePCM)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

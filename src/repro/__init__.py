@@ -1,0 +1,17 @@
+"""repro — TacitMap + EinsteinBarrier (BNN data mapping on PCM-based
+integrated photonics) rebuilt as a production JAX/TPU framework.
+
+Subpackages:
+  core         the paper's contribution (mappings, WDM, cost models, BNNs)
+  kernels      Pallas TPU kernels (packed XNOR matmul, WDM MMM, BitLinear)
+  models       LM-family architectures (dense / MoE / SSM / hybrid / enc-dec)
+  configs      the 10 assigned architecture configs + shapes + BNN configs
+  data         deterministic synthetic pipelines (restart-safe)
+  optim        AdamW (+ factored / quantized moments) and schedules
+  checkpoint   atomic, async, reshardable checkpoints
+  distributed  partitioner, pipeline parallelism, gradient compression
+  train        fault-tolerant training loop
+  launch       production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (atomic writes, async snapshots,
+mesh-agnostic restore)."""
+
+from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree

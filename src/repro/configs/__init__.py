@@ -1,0 +1,60 @@
+"""Assigned-architecture configs (``--arch <id>``).
+
+Each module defines ``CONFIG`` (exact published numbers, see the source
+annotations) and ``smoke_config()`` (a reduced same-family variant for
+CPU tests). ``get_config``/``ARCH_IDS`` are the public lookup API used
+by the launcher, dry-run, benchmarks, and tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+ARCH_IDS: tuple[str, ...] = (
+    "jamba-1.5-large-398b",
+    "internvl2-1b",
+    "grok-1-314b",
+    "qwen3-moe-235b-a22b",
+    "qwen1.5-0.5b",
+    "tinyllama-1.1b",
+    "qwen2-72b",
+    "llama3.2-3b",
+    "seamless-m4t-large-v2",
+    "mamba2-2.7b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, *, quant: str = "none") -> ModelConfig:
+    cfg = _module(arch).CONFIG
+    if quant != cfg.quant:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, quant=quant)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def all_cells() -> list[tuple[str, ShapeConfig, bool, str]]:
+    """All 40 (arch x shape) cells with the skip rule applied.
+
+    Returns (arch, shape, runs?, skip_reason)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            runs, why = shape_applicable(cfg, shape)
+            cells.append((arch, shape, runs, why))
+    return cells

@@ -1,0 +1,36 @@
+"""qwen2-72b [dense] — GQA, QKV bias [arXiv:2407.10671].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+"""
+
+from repro.models.config import LayerKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    pattern=(LayerKind(mixer="attn"),),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        qkv_bias=True,
+        pattern=(LayerKind(mixer="attn"),),
+        attn_chunk=32,
+        loss_chunk=32,
+    )

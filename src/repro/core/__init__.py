@@ -1,0 +1,38 @@
+"""The paper's primary contribution: TacitMap data mapping + the
+EinsteinBarrier oPCM/WDM accelerator, as composable JAX modules.
+
+Layout:
+  bnn.py            Eq. 1 arithmetic (XNOR+Popcount == complement-VMM), STE
+  crossbar.py       tile geometry + device (ADC/PCSA/TIA) models
+  tacitmap.py       the proposed vertical mapping (functional simulator)
+  custbinarymap.py  the SotA baseline mapping [15]
+  wdm.py            wavelength-division multiplexing (VMM -> MMM)
+  einsteinbarrier.py  Node/Tile/ECore/VCore hierarchy + placement
+  costmodel.py      latency/energy analytical models (Fig. 7 / Fig. 8)
+  networks.py       the 6 MlBench BNN workloads
+  model.py          trainable/executable BNNs with selectable engines
+"""
+
+from repro.core import (
+    bnn,
+    costmodel,
+    crossbar,
+    custbinarymap,
+    einsteinbarrier,
+    model,
+    networks,
+    tacitmap,
+    wdm,
+)
+
+__all__ = [
+    "bnn",
+    "costmodel",
+    "crossbar",
+    "custbinarymap",
+    "einsteinbarrier",
+    "model",
+    "networks",
+    "tacitmap",
+    "wdm",
+]

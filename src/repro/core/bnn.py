@@ -1,0 +1,128 @@
+"""Binary-neural-network arithmetic: Eq. 1 of the paper, binarization, STE.
+
+The paper's Eq. 1 (for equally-sized binary vectors)::
+
+    In (*) W = 2 * Popcount(In' XNOR W') - VectorLength
+
+where ``In', W'`` are the {0,1} encodings of the ±1 vectors ``In, W``.
+Everything in this module is pure jnp and differentiable where it needs
+to be (straight-through estimators for training).
+
+Conventions
+-----------
+* ``bits``    — arrays with values in {0, 1} (any integer/float dtype).
+* ``signs``   — arrays with values in {-1, +1}.
+* ``latent``  — real-valued master weights (training time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Encodings
+# ---------------------------------------------------------------------------
+
+
+def signs_to_bits(x: Array) -> Array:
+    """Map {-1,+1} -> {0,1} (``-1 -> 0``, ``+1 -> 1``)."""
+    return ((x + 1) // 2).astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.integer) else (x + 1.0) * 0.5
+
+
+def bits_to_signs(b: Array) -> Array:
+    """Map {0,1} -> {-1,+1}."""
+    return 2 * b - 1
+
+
+def binarize_ste(x: Array) -> Array:
+    """Sign-binarize with a straight-through estimator.
+
+    Forward: ``sign(x)`` in {-1, +1} (zero maps to +1).
+    Backward: identity within the clip region |x| <= 1 (hard-tanh STE,
+    the standard BNN estimator from Courbariaux et al.).
+    """
+    binary = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    # straight-through: forward uses `binary`, gradient flows through the
+    # clipped identity.
+    clipped = jnp.clip(x, -1.0, 1.0)
+    return clipped + jax.lax.stop_gradient(binary - clipped)
+
+
+def binarize_ste_bits(x: Array) -> Array:
+    """STE binarization straight to the {0,1} encoding."""
+    return signs_to_bits(binarize_ste(x))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1: XNOR + Popcount
+# ---------------------------------------------------------------------------
+
+
+def xnor(a_bits: Array, w_bits: Array) -> Array:
+    """Element-wise XNOR on {0,1} arrays (dtype-preserving, no bitwise ops
+    so it also works on float carriers)."""
+    return 1 - (a_bits + w_bits - 2 * a_bits * w_bits)
+
+
+def popcount(bits: Array, axis: int = -1) -> Array:
+    """Population count (number of set bits) along ``axis``."""
+    return jnp.sum(bits, axis=axis)
+
+
+def xnor_popcount(a_bits: Array, w_bits: Array) -> Array:
+    """``popcount(xnor(a, w))`` along the last axis — the BNN MAC."""
+    return popcount(xnor(a_bits, w_bits))
+
+
+def binary_dot_eq1(a_bits: Array, w_bits: Array) -> Array:
+    """Eq. 1: the ±1-domain dot product recovered from XNOR+popcount."""
+    m = a_bits.shape[-1]
+    return 2 * xnor_popcount(a_bits, w_bits) - m
+
+
+def binary_matmul_signs(a_signs: Array, w_signs: Array) -> Array:
+    """Reference ±1 binary matmul: ``a @ w`` for sign-valued arrays.
+
+    ``a_signs``: (..., m), ``w_signs``: (m, n) -> (..., n).
+    This is the ground truth every mapping/kernel must reproduce.
+    """
+    return jnp.matmul(a_signs, w_signs)
+
+
+# ---------------------------------------------------------------------------
+# The TacitMap algebraic core: complement concatenation
+# ---------------------------------------------------------------------------
+
+
+def concat_complement_input(a_bits: Array) -> Array:
+    """TacitMap input prep: ``[a ; ā]`` along the last axis (length 2m)."""
+    return jnp.concatenate([a_bits, 1 - a_bits], axis=-1)
+
+
+def stack_complement_weights(w_bits: Array) -> Array:
+    """TacitMap weight prep: ``[w ; w̄]`` stacked along the row axis.
+
+    ``w_bits``: (m, n) -> (2m, n): weight column then its complement
+    directly below it (Fig. 2-(b) of the paper).
+    """
+    return jnp.concatenate([w_bits, 1 - w_bits], axis=0)
+
+
+def tacitmap_vmm(a_bits: Array, w_bits: Array) -> Array:
+    """One-step XNOR+Popcount via a single VMM (the TacitMap identity).
+
+    ``a_bits``: (..., m) in {0,1}; ``w_bits``: (m, n) in {0,1}.
+    Returns popcount(XNOR) of shape (..., n), computed as
+    ``[a ; ā] @ [w ; w̄]`` — exactly what the crossbar's analog MAC does.
+    """
+    return jnp.matmul(concat_complement_input(a_bits), stack_complement_weights(w_bits))
+
+
+def tacitmap_binary_matmul(a_signs: Array, w_signs: Array) -> Array:
+    """±1 binary matmul routed through the TacitMap VMM identity."""
+    m = a_signs.shape[-1]
+    pc = tacitmap_vmm(signs_to_bits(a_signs), signs_to_bits(w_signs))
+    return 2 * pc - m

@@ -1,0 +1,107 @@
+"""CustBinaryMap: the SotA baseline mapping (Hirtzlin et al. [15]).
+
+2T2R rows: each weight vector is stored *horizontally* in a memory row,
+bit-interleaved with its complement (x, x̄ in the two devices of each
+2T2R cell). A precharge sense amplifier (PCSA) per bitline column reads
+the XNOR of the driven input against ONE stored weight vector per step;
+popcount then happens in digital peripherals (a 5-bit counter per
+column + a tree across arrays).
+
+Functionally the result equals ``popcount(XNOR(a, w_j))`` — the mapping
+is lossless, like TacitMap. The difference is *throughput*: one weight
+vector per step ("at most one single vector operation at a time", §I),
+so a layer with n output vectors costs n steps (vs TacitMap's 1).
+
+This simulator reproduces the step structure (a Python-level scan over
+weight rows would be slow and adds nothing — the per-step output is the
+XNOR row, so we compute all steps' outputs vectorized and report the
+step count separately, exactly what the cost model needs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bnn
+from repro.core.crossbar import CrossbarSpec, EPCM_TILE, TileGrid
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MappedLayerCBM:
+    """Weight vectors stored row-wise, bit-interleaved with complements.
+
+    ``rows`` has shape (n, 2m): row j = interleave(w_j, w̄_j). The
+    interleaving matches Fig. 2-(a): device pair (x, x̄) per 2T2R cell.
+    """
+
+    rows: Array
+    m: int
+    n: int
+    spec: CrossbarSpec
+    grid: TileGrid
+
+
+def interleave_complement(w_row_bits: Array) -> Array:
+    """(..., m) -> (..., 2m) with [w0, w̄0, w1, w̄1, ...] interleaving."""
+    stacked = jnp.stack([w_row_bits, 1 - w_row_bits], axis=-1)
+    return stacked.reshape(*w_row_bits.shape[:-1], 2 * w_row_bits.shape[-1])
+
+
+def map_weights(w_bits: Array, spec: CrossbarSpec = EPCM_TILE) -> MappedLayerCBM:
+    """Map a {0,1} weight matrix (m, n) row-wise (one vector per row)."""
+    m, n = w_bits.shape
+    rows = interleave_complement(w_bits.T)  # (n, 2m)
+    # fairness bookkeeping: same device count as TacitMap — n rows of 2m
+    # cells. Rows per array = spec.rows; a vector spans ceil(2m/cols)
+    # arrays horizontally.
+    grid = TileGrid(rows=n, cols=2 * m, spec=spec)
+    return MappedLayerCBM(rows=rows, m=m, n=n, spec=spec, grid=grid)
+
+
+def apply(layer: MappedLayerCBM, a_bits: Array) -> Array:
+    """PCSA readout: XNOR of input with every stored row, then popcount.
+
+    ``a_bits``: (..., m). Returns (..., n) popcounts. Each of the n rows
+    costs one sequential step in hardware (`steps_for`); the digital
+    popcount (counter + tree) is pipelined behind the reads.
+    """
+    if a_bits.shape[-1] != layer.m:
+        raise ValueError(f"input length {a_bits.shape[-1]} != mapped m={layer.m}")
+    drive = interleave_complement(a_bits)  # (..., 2m)
+    # PCSA differential sensing of the 2T2R pair == XNOR bit:
+    # sense(a,ā vs w,w̄) = 1 iff a == w. With the interleaved encoding
+    # this is exactly a "match" of consecutive device pairs:
+    a_pairs = drive.reshape(*drive.shape[:-1], layer.m, 2)
+    w_pairs = layer.rows.reshape(layer.n, layer.m, 2)
+    # match when the pair patterns are equal: sum of elementwise AND == 1
+    xnor_bits = jnp.einsum(
+        "...mp,nmp->...nm", a_pairs.astype(jnp.float32), w_pairs.astype(jnp.float32)
+    )
+    # digital popcount: 5-bit counters per column + adder tree
+    return xnor_bits.sum(axis=-1)
+
+
+def binary_matmul(a_signs: Array, w_signs: Array, spec: CrossbarSpec = EPCM_TILE) -> Array:
+    """±1 binary matmul through the CustBinaryMap path (for equivalence tests)."""
+    m = a_signs.shape[-1]
+    mapped = map_weights(bnn.signs_to_bits(w_signs).astype(jnp.int32), spec)
+    pc = apply(mapped, bnn.signs_to_bits(a_signs))
+    return 2 * pc - m
+
+
+def steps_for(m: int, n: int, n_inputs: int, spec: CrossbarSpec = EPCM_TILE) -> int:
+    """Sequential steps: one vector operation at a time (§I critique (b)).
+
+    Per input vector, all n stored weight vectors are read out one row
+    per step. The digital popcount is pipelined (counters run during the
+    next row read), so it does not add steps, only a small drain latency
+    that we fold into the per-step time.
+    """
+    del m, spec
+    return n_inputs * n

@@ -1,0 +1,231 @@
+"""Executable BNN models (MLP / conv) with selectable execution engines.
+
+Training uses latent real-valued master weights with STE binarization
+(§II-B: "tracking the updates of parameters during training via higher
+resolutions while keeping the actual weights binarized"); first and last
+layers stay high-precision.
+
+Inference can run each binary layer through one of three engines:
+
+* ``"reference"`` — Eq. 1 in plain jnp (``bnn.binary_matmul_signs``).
+* ``"tacitmap"``  — the full tiled-crossbar functional simulator.
+* ``"wdm"``       — the oPCM WDM path (K-grouped MMM steps).
+
+All three are bit-exact (tests assert it) — the paper's point that the
+mapping "simply accelerates" BNNs without touching accuracy.
+
+Convolutions are expressed as im2col + VMM, which is literally how the
+crossbar executes them (one im2col position = one input vector).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bnn, tacitmap, wdm
+from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
+
+Array = jax.Array
+
+Engine = str  # "reference" | "tacitmap" | "wdm"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    dims: tuple[int, ...] = (784, 500, 250, 10)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+
+def init_mlp(key: jax.Array, cfg: MLPConfig) -> dict:
+    params = {}
+    for i, (m, n) in enumerate(zip(cfg.dims[:-1], cfg.dims[1:])):
+        key, sub = jax.random.split(key)
+        scale = 1.0 / math.sqrt(m)
+        params[f"w{i}"] = jax.random.uniform(sub, (m, n), jnp.float32, -scale, scale)
+        params[f"b{i}"] = jnp.zeros((n,), jnp.float32)
+        params[f"g{i}"] = jnp.ones((n,), jnp.float32)  # BN-lite scale
+    return params
+
+
+def _is_edge(i: int, n_layers: int) -> bool:
+    return i == 0 or i == n_layers - 1
+
+
+def mlp_forward_train(params: dict, x: Array, cfg: MLPConfig) -> Array:
+    """Training forward: STE binarization on hidden layers.
+
+    No ReLU before ``sign`` (sign(relu(h)) is constantly +1 — it would
+    destroy the activation signal); instead each layer ends with a
+    learnable affine (g, b) that acts as the next sign's threshold, and
+    binary MACs are scaled by 1/sqrt(m) so pre-activations stay in the
+    STE's |h| <= 1 pass-through band.
+    """
+    h = x
+    for i in range(cfg.n_layers):
+        w = params[f"w{i}"]
+        if _is_edge(i, cfg.n_layers):
+            h = h @ w + params[f"b{i}"]
+        else:
+            a = bnn.binarize_ste(h)
+            wb = bnn.binarize_ste(w)
+            h = bnn.binary_matmul_signs(a, wb) / math.sqrt(w.shape[0]) + params[f"b{i}"]
+        if i < cfg.n_layers - 1:
+            h = params[f"g{i}"] * h
+    return h
+
+
+def _binary_layer_infer(
+    a_signs: Array, w_signs: Array, engine: Engine, spec: CrossbarSpec
+) -> Array:
+    if engine == "reference":
+        return bnn.binary_matmul_signs(a_signs, w_signs)
+    if engine == "tacitmap":
+        return tacitmap.binary_matmul(a_signs, w_signs, spec)
+    if engine == "wdm":
+        m = a_signs.shape[-1]
+        mapped = tacitmap.map_weights(
+            bnn.signs_to_bits(w_signs).astype(jnp.int32), spec
+        )
+        flat = a_signs.reshape(-1, m)
+        pc = wdm.wdm_apply(mapped, bnn.signs_to_bits(flat))
+        return (2 * pc - m).reshape(*a_signs.shape[:-1], -1)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def mlp_forward_infer(
+    params: dict,
+    x: Array,
+    cfg: MLPConfig,
+    engine: Engine = "reference",
+    spec: CrossbarSpec | None = None,
+) -> Array:
+    """Deploy-time forward: weights pre-binarized, selectable engine."""
+    spec = spec or (OPCM_TILE if engine == "wdm" else EPCM_TILE)
+    h = x
+    for i in range(cfg.n_layers):
+        w = params[f"w{i}"]
+        if _is_edge(i, cfg.n_layers):
+            h = h @ w + params[f"b{i}"]
+        else:
+            a = jnp.where(h >= 0, 1.0, -1.0)
+            wb = jnp.where(w >= 0, 1.0, -1.0)
+            pc = _binary_layer_infer(a, wb, engine, spec)
+            h = pc.astype(jnp.float32) / math.sqrt(w.shape[0]) + params[f"b{i}"]
+        if i < cfg.n_layers - 1:
+            h = params[f"g{i}"] * h
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Conv BNN (im2col — the crossbar's native view of convolution)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: Array, k: int, stride: int = 1) -> Array:
+    """(B, H, W, C) -> (B, H', W', k*k*C): one row per conv position."""
+    b, h, w, c = x.shape
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    patches = []
+    for dy in range(k):
+        for dx in range(k):
+            patches.append(x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride, :])
+    return jnp.concatenate(patches, axis=-1).reshape(b, oh, ow, k * k * c)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    """LeNet-style BNN: convs then FCs; first/last layers hi-res."""
+
+    in_hw: int = 28
+    in_ch: int = 1
+    convs: tuple[tuple[int, int], ...] = ((6, 5), (16, 5))  # (out_ch, k)
+    pools: tuple[int, ...] = (2, 2)
+    fcs: tuple[int, ...] = (120, 84, 10)
+
+
+def conv_feature_dims(cfg: ConvConfig) -> tuple[int, int]:
+    hw, c = cfg.in_hw, cfg.in_ch
+    for (out_ch, k), pool in zip(cfg.convs, cfg.pools):
+        hw = (hw - k + 1) // pool
+        c = out_ch
+    return hw, c
+
+
+def init_conv(key: jax.Array, cfg: ConvConfig) -> dict:
+    params = {}
+    c = cfg.in_ch
+    for i, (out_ch, k) in enumerate(cfg.convs):
+        key, sub = jax.random.split(key)
+        m = k * k * c
+        params[f"cw{i}"] = jax.random.uniform(sub, (m, out_ch), jnp.float32, -1 / math.sqrt(m), 1 / math.sqrt(m))
+        params[f"cg{i}"] = jnp.ones((out_ch,), jnp.float32)
+        c = out_ch
+    hw, c = conv_feature_dims(cfg)
+    dims = (hw * hw * c,) + cfg.fcs
+    for i, (m, n) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        params[f"fw{i}"] = jax.random.uniform(sub, (m, n), jnp.float32, -1 / math.sqrt(m), 1 / math.sqrt(m))
+        params[f"fb{i}"] = jnp.zeros((n,), jnp.float32)
+    return params
+
+
+def _avgpool(x: Array, p: int) -> Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // p, p, w // p, p, c).mean(axis=(2, 4))
+
+
+def conv_forward(
+    params: dict,
+    x: Array,
+    cfg: ConvConfig,
+    train: bool = True,
+    engine: Engine = "reference",
+    spec: CrossbarSpec | None = None,
+) -> Array:
+    """(B, H, W, C) images -> logits. Binary layers = all but first/last."""
+    spec = spec or (OPCM_TILE if engine == "wdm" else EPCM_TILE)
+    n_fc = len(cfg.fcs)
+    h = x
+    for i, ((out_ch, k), pool) in enumerate(zip(cfg.convs, cfg.pools)):
+        cols = im2col(h, k)  # (B, oh, ow, m)
+        w = params[f"cw{i}"]
+        scale = 1.0 / math.sqrt(w.shape[0])
+        if i == 0:  # hi-res edge layer
+            h = cols @ w
+        else:
+            if train:
+                a = bnn.binarize_ste(cols)
+                wb = bnn.binarize_ste(w)
+                h = bnn.binary_matmul_signs(a, wb) * scale
+            else:
+                a = jnp.where(cols >= 0, 1.0, -1.0)
+                wb = jnp.where(w >= 0, 1.0, -1.0)
+                h = _binary_layer_infer(a, wb, engine, spec).astype(jnp.float32) * scale
+        h = params[f"cg{i}"] * h  # learnable pre-sign affine (no ReLU: see mlp)
+        h = _avgpool(h, pool)
+    h = h.reshape(h.shape[0], -1)
+    for i in range(n_fc):
+        w = params[f"fw{i}"]
+        scale = 1.0 / math.sqrt(w.shape[0])
+        if i == n_fc - 1:  # hi-res edge layer
+            h = h @ w + params[f"fb{i}"]
+        else:
+            if train:
+                a, wb = bnn.binarize_ste(h), bnn.binarize_ste(w)
+                h = bnn.binary_matmul_signs(a, wb) * scale + params[f"fb{i}"]
+            else:
+                a = jnp.where(h >= 0, 1.0, -1.0)
+                wb = jnp.where(w >= 0, 1.0, -1.0)
+                h = (
+                    _binary_layer_infer(a, wb, engine, spec).astype(jnp.float32) * scale
+                    + params[f"fb{i}"]
+                )
+    return h

@@ -1,0 +1,128 @@
+"""Multi-level PCM study — the paper's §VI-C future-work item, built on
+the crossbar device models.
+
+The paper uses PCM cells in BINARY mode, citing Cardoso et al. [16]:
+at realistic photonic noise levels, multi-level cells corrupt the MAC.
+This module quantifies that trade-off with the same machinery the
+mappings use, closing the loop the paper leaves open:
+
+* ``quantize_weights(w, bits)`` — a multi-level cell stores ``bits``
+  bits of a fixed-point weight; TacitMap's complement trick generalizes
+  (store w and (2^bits-1)-w below it) so the same crossbar computes the
+  multi-level MAC in one VMM.
+* ``noisy_vmm(...)`` — the analog MAC with the oPCM readout-noise model
+  (relative Gaussian on the photocurrent, sigma per §II-C's "high
+  frequencies = high noise"), followed by ADC quantization.
+* ``level_error_rate(...)`` — Monte-Carlo probability that noise flips
+  the recovered dot product by at least one output LSB, per cell depth.
+
+The headline result (benchmarks/multilevel.py): at the noise level
+where the 1-bit (binary) mapping is still exact, 2-bit cells already
+misread a measurable fraction of MACs and 4-bit cells are unusable —
+the quantitative version of the paper's §II-C argument for why
+EinsteinBarrier stays binary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crossbar import CrossbarSpec, OPCM_TILE
+
+Array = jax.Array
+
+
+def quantize_weights(w: Array, bits: int) -> Array:
+    """Real-valued w in [-1, 1] -> integer conductance levels 0..2^b-1."""
+    levels = 2**bits - 1
+    return jnp.round((jnp.clip(w, -1.0, 1.0) + 1.0) * 0.5 * levels).astype(jnp.int32)
+
+
+def dequantize(q: Array, bits: int) -> Array:
+    levels = 2**bits - 1
+    return q.astype(jnp.float32) / levels * 2.0 - 1.0
+
+
+def multilevel_vmm_exact(a_levels: Array, w_levels: Array) -> Array:
+    """Noise-free analog MAC on integer levels (the crossbar ideal)."""
+    return jnp.matmul(a_levels.astype(jnp.float32), w_levels.astype(jnp.float32))
+
+
+def noisy_vmm(
+    a_levels: Array,
+    w_levels: Array,
+    bits: int,
+    sigma: float,
+    key: jax.Array,
+    spec: CrossbarSpec = OPCM_TILE,
+) -> Array:
+    """Analog MAC with multiplicative photocurrent noise + ADC.
+
+    sigma is the RELATIVE noise on each cell's contribution (per [16]:
+    noise grows with modulation frequency). The ADC quantizes the summed
+    current to ``spec.adc_bits`` over the full-scale range
+    rows * levels^2 (input levels x weight levels).
+    """
+    levels = 2**bits - 1
+    af = a_levels.astype(jnp.float32)
+    wf = w_levels.astype(jnp.float32)
+    contrib = af[..., :, None] * wf[None, ...]  # (batch, m, n) cell currents
+    noise = 1.0 + sigma * jax.random.normal(key, contrib.shape)
+    summed = jnp.sum(contrib * noise, axis=-2)
+    # the ADC cannot resolve finer than one level-product unit (outputs
+    # are integers in level units); its range covers full scale
+    full_scale = a_levels.shape[-1] * levels * levels
+    lsb = max(max(full_scale, 1) / spec.adc_levels, 1.0)
+    return jnp.round(summed / lsb) * lsb
+
+
+def level_error_rate(
+    bits: int,
+    sigma: float,
+    *,
+    m: int = 64,
+    n: int = 32,
+    batch: int = 64,
+    seed: int = 0,
+    spec: CrossbarSpec = OPCM_TILE,
+) -> float:
+    """Fraction of MAC outputs whose ADC reading differs from exact."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    levels = 2**bits - 1
+    a = jax.random.randint(k1, (batch, m), 0, levels + 1)
+    w = jax.random.randint(k2, (m, n), 0, levels + 1)
+    exact = multilevel_vmm_exact(a, w)
+    noisy = noisy_vmm(a, w, bits, sigma, k3, spec)
+    # error = recovered reading off the TRUE integer MAC by >= 1 output
+    # unit: captures BOTH analog noise and the ADC-resolution loss that
+    # deeper cells force (full scale grows as levels^2 while the ADC
+    # stays 9-bit — the paper's argument for binary cells, quantified)
+    return float(jnp.mean(jnp.abs(noisy - exact) > 0.5))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    bits: int
+    sigma: float
+    error_rate: float
+    density_x: float      # storage density vs binary
+    latency_x: float      # steps saved vs bit-serial binary (= bits)
+
+
+def sweep(bit_depths=(1, 2, 4), sigmas=(0.0, 0.01, 0.02, 0.05, 0.1), **kw):
+    out = []
+    for bits in bit_depths:
+        for sigma in sigmas:
+            out.append(
+                SweepPoint(
+                    bits=bits,
+                    sigma=sigma,
+                    error_rate=level_error_rate(bits, sigma, **kw),
+                    density_x=float(bits),
+                    latency_x=float(bits),
+                )
+            )
+    return out

@@ -1,0 +1,120 @@
+"""TacitMap: the paper's data mapping, as a functional tiled-crossbar simulator.
+
+Given a binary weight matrix ``W`` (m, n) in {0,1}:
+
+1. stack the complement below it -> (2m, n)   (Fig. 2-(b))
+2. cut into crossbar tiles of ``spec.rows x spec.cols``
+3. for an input bit-vector ``a`` (m,): drive ``[a ; ā]`` onto the rows;
+   every tile performs one analog MAC per column; per-tile column sums
+   pass through that tile's ADC; row-tile partials are summed digitally.
+
+The result is ``popcount(XNOR(a, w_j))`` for every stored column ``j`` in
+ONE step — the mapping's whole point. This module is bit-exact against
+``bnn.tacitmap_vmm`` when the ADC is sized losslessly (the default), and
+exposes step/energy counters the cost model consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bnn
+from repro.core.crossbar import CrossbarSpec, EPCM_TILE, TileGrid, adc_quantize, readout_noise
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MappedLayer:
+    """A binary weight matrix mapped onto a tiled crossbar array.
+
+    ``tiles`` has shape (row_tiles, R, col_tiles, C): the physical cell
+    states ({0,1} conductances / PCM phases), zero-padded outside the
+    logical (2m, n) region. Padding cells contribute 0 to column sums by
+    construction (input pad bits are driven as 0), so no masking is
+    needed at readout.
+    """
+
+    tiles: Array
+    m: int  # logical vector length (rows used = 2m)
+    n: int  # stored weight vectors (columns used)
+    spec: CrossbarSpec
+    grid: TileGrid
+
+    @property
+    def steps_per_input(self) -> int:
+        """Sequential crossbar steps per input vector: 1 (all tiles parallel)."""
+        return 1
+
+
+def map_weights(w_bits: Array, spec: CrossbarSpec = EPCM_TILE) -> MappedLayer:
+    """Map a {0,1} weight matrix (m, n) onto crossbar tiles, TacitMap-style."""
+    m, n = w_bits.shape
+    stacked = bnn.stack_complement_weights(w_bits)  # (2m, n)
+    grid = TileGrid(rows=2 * m, cols=n, spec=spec)
+    R, C = spec.rows, spec.cols
+    pad_r = grid.row_tiles * R - 2 * m
+    pad_c = grid.col_tiles * C - n
+    padded = jnp.pad(stacked, ((0, pad_r), (0, pad_c)))
+    tiles = padded.reshape(grid.row_tiles, R, grid.col_tiles, C)
+    return MappedLayer(tiles=tiles, m=m, n=n, spec=spec, grid=grid)
+
+
+def apply(
+    layer: MappedLayer,
+    a_bits: Array,
+    *,
+    noise_sigma: float = 0.0,
+    key: jax.Array | None = None,
+) -> Array:
+    """Drive input bit-vectors through the mapped crossbar.
+
+    ``a_bits``: (..., m) in {0,1}. Returns popcount(XNOR) of shape
+    (..., n). Every input vector costs ONE crossbar step; the batch
+    dimension models sequential steps (ePCM) or WDM wavelengths (oPCM —
+    see ``wdm.py`` for the grouping that decides which).
+    """
+    if a_bits.shape[-1] != layer.m:
+        raise ValueError(f"input length {a_bits.shape[-1]} != mapped m={layer.m}")
+    spec = layer.spec
+    R = spec.rows
+    drive = bnn.concat_complement_input(a_bits)  # (..., 2m)
+    pad = layer.grid.row_tiles * R - drive.shape[-1]
+    drive = jnp.pad(drive, [(0, 0)] * (drive.ndim - 1) + [(0, pad)])
+    drive = drive.reshape(*drive.shape[:-1], layer.grid.row_tiles, R)
+    # analog MAC: per row-tile partial column sums ("...rm" x "rmcn")
+    partial = jnp.einsum(
+        "...rm,rmcn->...rcn", drive.astype(jnp.float32), layer.tiles.astype(jnp.float32)
+    )
+    # each tile's columns go through that tile's ADC (active rows = R)
+    partial = adc_quantize(partial, spec, active_rows=R)
+    partial = readout_noise(partial, noise_sigma, key)
+    # digital partial-sum accumulation across row tiles
+    out = partial.sum(axis=-3)  # (..., col_tiles, C)
+    out = out.reshape(*out.shape[:-2], layer.grid.col_tiles * spec.cols)
+    return out[..., : layer.n]
+
+
+def binary_matmul(
+    a_signs: Array, w_signs: Array, spec: CrossbarSpec = EPCM_TILE, **kw
+) -> Array:
+    """±1 binary matmul executed through the full crossbar simulation."""
+    m = a_signs.shape[-1]
+    mapped = map_weights(bnn.signs_to_bits(w_signs).astype(jnp.int32), spec)
+    pc = apply(mapped, bnn.signs_to_bits(a_signs), **kw)
+    return 2 * pc - m
+
+
+def steps_for(m: int, n: int, n_inputs: int, spec: CrossbarSpec = EPCM_TILE) -> int:
+    """Sequential VMM steps TacitMap needs for ``n_inputs`` vectors.
+
+    All row/col tiles fire in parallel (spatial architecture, digital
+    partial-sum adders), so the count is just the input count — compare
+    ``custbinarymap.steps_for``.
+    """
+    del m, n, spec
+    return n_inputs

@@ -1,0 +1,125 @@
+"""Synthetic data generation + ShapeDtypeStruct stand-ins.
+
+Two call families:
+
+* ``lm_batch`` / ``bnn_image_batch`` / ``frontend_embeds`` — REAL
+  arrays, deterministic in (seed, step). Used by examples, smoke tests,
+  and the training loop. LM tokens follow a skewed (Zipf-ish) marginal
+  so losses have realistic structure rather than uniform noise.
+* ``make_input_specs`` — ShapeDtypeStruct pytrees mirroring the real
+  batches, used by the dry-run (never allocates; shard-able).
+
+Shape conventions per cell kind (see ``ModelConfig``/``ShapeConfig``):
+
+  train    {tokens (B, S) i32} (+ extra_embeds / src_embeds for
+           vlm / encdec frontends — stub embeddings per the brief)
+  prefill  same tokens pytree, lowered against ``prefill``
+  decode   {token (B,) i32, pos scalar i32, caches pytree(S_cache)}
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig, ShapeConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Real batches (deterministic in (seed, step))
+# ---------------------------------------------------------------------------
+
+
+def _fold(seed: int, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.key(seed), step)
+
+
+def lm_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0, step: int = 0) -> dict:
+    """Skewed synthetic token batch; pure function of (seed, step)."""
+    key = _fold(seed, step)
+    k1, k2 = jax.random.split(key)
+    # Zipf-ish marginal: exp-distributed logits over a vocab-sized support
+    u = jax.random.uniform(k1, (batch, seq), minval=1e-6, maxval=1.0)
+    r = jnp.floor(-jnp.log(u) * cfg.vocab_size / 8.0).astype(jnp.int32)
+    tokens = jnp.clip(r, 0, cfg.vocab_size - 1)
+    out: dict[str, Any] = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        out["extra_embeds"] = frontend_embeds(cfg, batch, key=k2)
+    elif cfg.is_encdec:
+        out["src_embeds"] = frontend_embeds(cfg, batch, key=k2)
+    return out
+
+
+def frontend_embeds(cfg: ModelConfig, batch: int, *, key: jax.Array | None = None) -> Array:
+    """Stub modality frontend: unit-variance patch/frame embeddings."""
+    if key is None:
+        key = jax.random.key(0)
+    return jax.random.normal(key, (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+
+
+def bnn_image_batch(
+    n: int, shape: tuple[int, ...] = (28, 28, 1), classes: int = 10, *, seed: int = 0, step: int = 0
+) -> tuple[Array, Array]:
+    """Class-conditional synthetic images (MNIST/CIFAR stand-ins): each
+    class is a fixed random template + noise, so BNNs actually learn."""
+    key = _fold(seed, step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (n,), 0, classes)
+    templates = jax.random.normal(jax.random.key(seed + 999), (classes, *shape))
+    x = templates[labels] + 0.5 * jax.random.normal(k2, (n, *shape))
+    del k3
+    return x.astype(jnp.float32), labels
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _spec_like(tree):
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), tree)
+
+
+def make_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct pytree for one (arch x shape) cell.
+
+    Weak-type-correct and shardable; mirrors exactly what the train /
+    prefill / decode entry points take (see launch/dryrun.py).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "vision":
+            specs["extra_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+        elif cfg.is_encdec:
+            specs["src_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    if cfg.is_encdec:
+        cache = jax.eval_shape(
+            lambda: encdec.init_cache(cfg, b, s, src_len=cfg.frontend_len)
+        )
+    else:
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    return {
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "caches": _spec_like(cache),
+    }
+
+
+def token_count(shape: ShapeConfig) -> int:
+    """Tokens processed by one lowered step (decode steps process B)."""
+    if shape.kind == "decode":
+        return shape.global_batch
+    return shape.global_batch * shape.seq_len

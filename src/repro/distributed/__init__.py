@@ -1,0 +1,19 @@
+"""Distribution layer: sharding rules, pipeline parallelism, gradient
+compression, and collective helpers — the 1000-node posture.
+
+  partitioner.py  candidate-list PartitionSpec inference with
+                  divisibility fallback (DP/TP/EP/SP from one rule set)
+  pipeline.py     GPipe microbatch schedule via shard_map + ppermute
+  compression.py  int8 error-feedback gradient all-reduce
+  collectives.py  overlap-friendly reduce-scatter / all-gather helpers
+"""
+
+from repro.distributed.partitioner import (
+    batch_specs,
+    cache_specs,
+    data_axes,
+    infer_specs,
+    named_shardings,
+    opt_state_specs,
+    validate_specs,
+)

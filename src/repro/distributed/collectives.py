@@ -1,0 +1,40 @@
+"""Collective helpers for overlap-friendly gradient paths.
+
+Used inside ``shard_map`` regions (the pipeline, the compressed
+all-reduce). For the pjit path, XLA's SPMD partitioner emits the
+collectives; overlap there is enabled by the latency-hiding-scheduler
+flags set in ``launch/train.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ring_all_reduce_mean(x: Array, axis_name: str) -> Array:
+    """psum / axis_size — the canonical DP gradient reduction."""
+    return jax.lax.psum(x, axis_name) / jax.lax.psum(1, axis_name)
+
+
+def reduce_scatter_mean(x: Array, axis_name: str, *, scatter_dim: int = 0) -> Array:
+    """ZeRO-2 gradient path: each rank keeps 1/N of the reduced tensor.
+
+    Returns the local shard (dim ``scatter_dim`` divided by axis size).
+    """
+    n = jax.lax.psum(1, axis_name)
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=scatter_dim, tiled=True) / n
+
+
+def all_gather_dim(x: Array, axis_name: str, *, dim: int = 0) -> Array:
+    """Inverse of ``reduce_scatter_mean`` (parameter re-materialization)."""
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def ppermute_shift(x: Array, axis_name: str, shift: int = 1) -> Array:
+    """Neighbour exchange on a ring — the pipeline's stage hand-off."""
+    n = jax.lax.psum(1, axis_name)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis_name, perm)

@@ -1,0 +1,104 @@
+"""Activation sharding hints (logical-axis constraints).
+
+XLA's SPMD propagation is greedy: without mid-graph anchors it happily
+replicates attention heads / SSD heads / MoE buffers over the model
+axis inside scanned layers (while-loop carries force one sharding per
+buffer, and the propagation pass often picks the replicated fixpoint).
+A handful of ``with_sharding_constraint`` anchors at the block
+boundaries pins the intended layout — measured on qwen1.5-0.5b
+train_4k, anchoring q/k/v heads cut per-device attention FLOPs 16x
+(see EXPERIMENTS.md §Perf).
+
+The hints are *contextual* so model code stays mesh-agnostic:
+
+    with activation_hints(mesh):
+        lowered = jit(step).lower(...)
+
+``hint(x, *axes)`` is a no-op outside the context (CPU unit tests) and
+silently drops any axis that does not divide the corresponding dim
+(tinyllama's 4 KV heads on a 16-way model axis -> that dim replicates,
+everything else still shards).
+
+Axis vocabulary: "dp" (all pure-DP axes: pod+data), "data", "model",
+None. Dims beyond the given axes replicate.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+MODEL_AXIS = "model"
+
+
+@contextmanager
+def activation_hints(mesh: Mesh | None, *, batch_axes: tuple | None = None, tp: bool = True):
+    """``batch_axes`` overrides what "dp" resolves to (FSDP mode shards
+    the batch over the model axis too); ``tp=False`` drops all "model"
+    hints (no tensor parallelism — ZeRO-3-style training where weights
+    are gathered per layer and activations own every mesh axis)."""
+    prev = (getattr(_CTX, "mesh", None), getattr(_CTX, "batch_axes", None),
+            getattr(_CTX, "tp", True))
+    _CTX.mesh, _CTX.batch_axes, _CTX.tp = mesh, batch_axes, tp
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.batch_axes, _CTX.tp = prev
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_CTX, "mesh", None)
+
+
+def _resolve(axis, mesh: Mesh):
+    """'dp' -> the context batch axes (default: pod+data); 'model' ->
+    itself unless TP is disabled in this context."""
+    if axis is None:
+        return None
+    if axis == "dp":
+        override = getattr(_CTX, "batch_axes", None)
+        if override is not None:
+            axes = tuple(a for a in override if a in mesh.shape)
+        else:
+            axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        return axes if axes else None
+    if axis == "dp_strict":
+        # always the pure-DP axes, ignoring any FSDP batch override —
+        # used where another dim owns the model axis (vocab-parallel loss)
+        axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        return axes if axes else None
+    if axis == "model" and not getattr(_CTX, "tp", True):
+        return None
+    if axis == "model_strict":  # model axis even when TP is off (vocab-parallel loss)
+        axis = MODEL_AXIS
+    return axis if axis in mesh.shape else None
+
+
+def _axis_size(axis, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def hint(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x``'s leading dims to ``axes`` (see module docstring)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, axis in zip(x.shape, axes):
+        r = _resolve(axis, mesh)
+        spec.append(r if r is not None and dim % _axis_size(r, mesh) == 0 else None)
+    if not any(s is not None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

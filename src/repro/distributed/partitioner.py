@@ -1,0 +1,305 @@
+"""PartitionSpec inference: candidate lists + divisibility fallback.
+
+Every parameter/input/cache leaf gets an ordered list of candidate
+PartitionSpecs (most-sharded first) selected by its tree path; the
+first candidate whose every sharded dim divides evenly wins. This one
+mechanism yields, across the 10 assigned architectures:
+
+* TP       — attention heads / FFN hidden / vocab over ``model``
+* FSDP     — the complementary weight dim over ``data`` (ZeRO-3-style;
+             optimizer state inherits the same specs, so Adam moments
+             shard identically for free)
+* EP       — MoE expert dim over ``model`` when E % tp == 0 (qwen3's
+             128, jamba's 16), falling back to FFN-dim TP when not
+             (grok's 8 on a 16-way axis)
+* SP       — decode KV caches sequence-sharded over ``model`` (and over
+             ``data`` too for long_500k, where batch=1 gives data
+             nothing else to do)
+* DP       — batch over (``pod``, ``data``): pure DP across the pod
+             axis (DCN-friendly: only gradient all-reduce crosses pods)
+
+Divisibility fallback examples: tinyllama's 4 KV heads can't shard over
+a 16-way model axis -> its KV projections replicate while Q stays TP;
+internvl2's 151655 vocab is odd -> the embedding shards d_model
+instead.
+
+The inference is *static* (operates on shapes, no device state), so the
+dry-run can build specs for 512-device meshes before any allocation.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+MODEL = "model"
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Pure-DP axes: ('pod', 'data') on multi-pod meshes, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _fits(spec: P, shape: tuple[int, ...], mesh: Mesh) -> bool:
+    if len(spec) > len(shape):
+        return False
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for a in axes:
+            if a not in mesh.shape:
+                return False
+            size *= mesh.shape[a]
+        if dim % size != 0:
+            return False
+    return True
+
+
+def first_fitting(
+    candidates: Sequence[P], shape: tuple[int, ...], mesh: Mesh
+) -> P:
+    for c in candidates:
+        if _fits(c, shape, mesh):
+            return c
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, candidate builder). ``d`` = data axis for FSDP. Param
+# tensors under ``blocks`` carry a leading repeat/stack dim (scan), and
+# enc/dec blocks a leading layer dim — handled by the ``lead`` prefix.
+def _param_rules(d: str, fsdp: bool = False):
+    R = None  # leading repeat dim: never sharded
+    # ZeRO-3 training: no vocab parallelism — a V-sharded table forces a
+    # full (V, d) fp32 materialization in the embedding-grad scatter
+    # when the batch owns the model axis (measured: 4.6 GiB/dev x
+    # several copies on qwen2-72b). d-sharded tables scatter shard-local.
+    embed_cands = (
+        [P(None, MODEL), P(d, MODEL), P(None, d), P()]
+        if fsdp
+        else [P(MODEL, d), P(None, MODEL), P(None, d), P()]
+    )
+    # head stays 2D (d over data, V over model) in BOTH modes: the loss
+    # region pins its batch to the data axes only (hint "dp_strict"), so
+    # the vocab-parallel logits/lse/grad all stay sharded — the
+    # alternative (V replicated) materializes a full (d, V) fp32 head
+    # gradient per device and all-reduces it once per loss chunk.
+    head_cands = [P(d, MODEL), P(MODEL, None), P(d, None), P()]
+    return [
+        # embeddings / lm head
+        (r"(^|/)embed$", embed_cands),
+        (r"(^|/)head$", head_cands),
+        # attention projections (leading repeat dim under blocks)
+        (r"attn/[qkv]/w$", [P(R, d, MODEL), P(R, d, None), P(R, None, None)]),
+        (r"attn/[qkv]/b$", [P(R, MODEL), P(R, None)]),
+        (r"attn/o/w$", [P(R, MODEL, d), P(R, None, d), P(R, None, None)]),
+        (r"attn/o/b$", [P(R, None)]),
+        # dense FFN
+        (r"ffn/w[13]/w$", [P(R, d, MODEL), P(R, d, None), P(R, None, None)]),
+        (r"ffn/w2/w$", [P(R, MODEL, d), P(R, None, d), P(R, None, None)]),
+        # MoE: experts over model (EP) else ffn-dim over model (TP)
+        (r"moe/router$", [P(R, d, None), P(R, None, None)]),
+        (r"moe/w[13]$", [P(R, MODEL, d, None), P(R, None, d, MODEL), P(R, None, d, None), P(R, None, None, None)]),
+        (r"moe/w2$", [P(R, MODEL, None, d), P(R, None, MODEL, d), P(R, None, None, d), P(R, None, None, None)]),
+        # mamba (unfused projections; see models/ssm.py)
+        (r"mamba/[zx]_proj/w$", [P(R, d, MODEL), P(R, d, None), P(R, None, None)]),
+        (r"mamba/[bc]_proj/w$", [P(R, d, None), P(R, None, None)]),
+        (r"mamba/dt_proj/w$", [P(R, d, MODEL), P(R, d, None), P(R, None, None)]),
+        (r"mamba/conv_x$", [P(R, None, MODEL), P(R, None, None)]),
+        (r"mamba/conv_[bc]$", [P(R, None, None)]),
+        (r"mamba/conv_bias_x$", [P(R, MODEL), P(R, None)]),
+        (r"mamba/conv_bias_[bc]$", [P(R, None)]),
+        (r"mamba/(A_log|D|dt_bias)$", [P(R, MODEL), P(R, None)]),
+        (r"mamba/norm$", [P(R, MODEL), P(R, None)]),
+        (r"mamba/out_proj/w$", [P(R, MODEL, d), P(R, None, d), P(R, None, None)]),
+        # norms and everything else: replicated (beyond the repeat dim)
+        (r"norm", [P()]),
+    ]
+
+
+def _path_of(key_path) -> str:
+    parts = []
+    for p in key_path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _strip_lead(spec_dims: tuple, shape: tuple[int, ...]) -> P:
+    """Right-align a spec against a shape (leading stack dims -> None)."""
+    pad = len(shape) - len(spec_dims)
+    if pad < 0:
+        return P(*spec_dims[-len(shape):]) if len(shape) else P()
+    return P(*([None] * pad), *spec_dims)
+
+
+def infer_specs(tree: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """Param pytree (arrays or ShapeDtypeStructs) -> PartitionSpec pytree."""
+    d = "data" if "data" in mesh.shape else None
+    rules = [(re.compile(rx), cands) for rx, cands in _param_rules(d, fsdp)]
+
+    def leaf_spec(key_path, leaf) -> P:
+        path = _path_of(key_path)
+        shape = tuple(leaf.shape)
+        for rx, cands in rules:
+            if rx.search(path):
+                aligned = [_strip_lead(tuple(c), shape) for c in cands]
+                return first_fitting(aligned, shape, mesh)
+        # default: FSDP the biggest dim over data if it divides
+        if shape and d is not None:
+            big = max(range(len(shape)), key=lambda i: shape[i])
+            cand = P(*[d if i == big else None for i in range(len(shape))])
+            return first_fitting([cand], shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def opt_state_specs(param_specs: Any, opt_state: Any) -> Any:
+    """Adam m/v (and the fp32 master copy, when present) inherit the
+    param specs (factored v stats drop the last/-2nd dim respectively);
+    step is replicated."""
+
+    def v_spec(ps: P, v):
+        if isinstance(v, dict):  # factored {vr, vc}
+            dims = tuple(ps)
+            return {
+                "vr": P(*dims[:-1]) if dims else P(),
+                "vc": P(*dims[:-2], *dims[-1:]) if len(dims) >= 2 else P(),
+            }
+        return ps
+
+    v_specs = jax.tree.map(
+        v_spec, param_specs, opt_state["v"], is_leaf=lambda x: isinstance(x, P)
+    )
+    specs = {"step": P(), "m": param_specs, "v": v_specs}
+    if "master" in opt_state:
+        specs["master"] = param_specs
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(specs_tree: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """Inputs: batch dim over the DP axes; ``fsdp=True`` tries the model
+    axis too (ZeRO-3 training: activations own every mesh axis, weights
+    are gathered per layer), falling back down a divisibility ladder."""
+    dp = data_axes(mesh)
+
+    ladder: list[tuple] = []
+    if fsdp:
+        ladder.append((*dp, MODEL))
+        if len(dp) > 1:  # multi-pod: ("data", "model") before plain DP
+            ladder.append((dp[-1], MODEL))
+    ladder.append(dp)
+    if dp:
+        ladder.append((dp[-1],))
+
+    def leaf(key_path, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        aligned = [P(c, *([None] * (len(shape) - 1))) for c in ladder]
+        return first_fitting(aligned, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, specs_tree)
+
+
+def fsdp_batch_axes(batch_size: int, mesh: Mesh) -> tuple[str, ...]:
+    """The axis tuple the FSDP ladder would give this batch size."""
+    dp = data_axes(mesh)
+    for cand in ((*dp, MODEL), (dp[-1], MODEL) if dp else (MODEL,), dp, (dp[-1],) if dp else ()):
+        n = 1
+        for a in cand:
+            n *= mesh.shape.get(a, 10**9)
+        if cand and batch_size % n == 0:
+            return tuple(cand)
+    return ()
+
+
+def cache_specs(cache_tree: Any, mesh: Mesh, *, seq_axis_hint: int = 2) -> Any:
+    """Decode caches. KV caches are (L, B, T, KV, D): batch over data,
+    T (sequence) over model — SP for the softmax reductions. When batch
+    can't use the data axis (long_500k's B=1), T takes (data, model).
+    SSM states (L, B, H, N, P) shard H over model; conv states shard
+    their channel dim."""
+    dp = data_axes(mesh)
+    dlast = dp[-1] if dp else None
+
+    def leaf(key_path, leaf) -> P:
+        path = _path_of(key_path)
+        shape = tuple(leaf.shape)
+        if "ssm" in path and len(shape) == 5:  # (L,B,H,N,P)
+            cands = [
+                P(None, dlast, MODEL, None, None),
+                P(None, None, (*dp, MODEL), None, None),
+                P(None, None, MODEL, None, None),
+                P(),
+            ]
+        elif "conv" in path and len(shape) == 4:  # (L,B,K-1,C)
+            cands = [
+                P(None, dlast, None, MODEL),
+                P(None, None, None, (*dp, MODEL)),
+                P(None, None, None, MODEL),
+                P(),
+            ]
+        elif len(shape) == 5:  # attn KV (L,B,T,KV,D)
+            cands = [
+                P(None, dlast, MODEL, None, None),
+                P(None, None, (*dp, MODEL), None, None),
+                P(None, None, MODEL, None, None),
+                P(),
+            ]
+        elif len(shape) == 4:  # enc-dec KV without layer stack? (B,T,KV,D)
+            cands = [P(dlast, MODEL, None, None), P(None, MODEL, None, None), P()]
+        elif len(shape) >= 1:
+            cands = [P(dlast), P()]
+        else:
+            return P()
+        return first_fitting(cands, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def validate_specs(tree: Any, specs: Any, mesh: Mesh) -> list[str]:
+    """Return a list of violations (empty == all specs divide evenly)."""
+    problems: list[str] = []
+
+    def check(key_path, leaf, spec):
+        if not _fits(spec, tuple(leaf.shape), mesh):
+            problems.append(f"{_path_of(key_path)}: {spec} !~ {tuple(leaf.shape)}")
+
+    jax.tree_util.tree_map_with_path(
+        check, tree, specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return problems

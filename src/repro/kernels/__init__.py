@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  xnor_matmul.py       packed XNOR+popcount matmul (TacitMap's crossbar
+                       step, bit-packed for the TPU memory hierarchy)
+  wdm_mmm.py           K-wavelength MMM on the MXU (EinsteinBarrier's WDM)
+  bitlinear.py         fused binarize -> ±1 matmul -> rescale (deploy)
+  flash_attention.py   fused online-softmax attention (scores stay in
+                       VMEM — the dominant memory-roofline term in the
+                       dry-run, see EXPERIMENTS.md §Perf)
+  ops.py               jit'd public wrappers (packing, padding, Eq. 1)
+  ref.py               pure-jnp oracles
+
+Kernels target TPU (BlockSpec VMEM tiling, MXU-aligned blocks) and are
+validated on CPU with interpret=True.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

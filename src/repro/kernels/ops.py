@@ -1,0 +1,143 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles bit-packing, padding to block multiples, the Eq. 1 affine
+correction, and shape restoration — callers pass ordinary arrays.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitlinear as _bitlinear_kernel
+from repro.kernels import wdm_mmm as _wdm_kernel
+from repro.kernels import xnor_matmul as _xnor_kernel
+
+Array = jax.Array
+
+WORD = 32
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(bits: Array, axis: int = -1) -> Array:
+    """Pack {0,1} values into int32 words along ``axis`` (zero-padded).
+
+    (..., m) -> (..., ceil(m/32)); bit i of word j is element 32*j + i.
+    """
+    bits = jnp.moveaxis(bits, axis, -1)
+    m = bits.shape[-1]
+    kw = math.ceil(m / WORD)
+    pad = kw * WORD - m
+    b = jnp.pad(bits.astype(jnp.uint32), [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(*b.shape[:-1], kw, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    words = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)  # disjoint bits: sum == or
+    return jnp.moveaxis(jax.lax.bitcast_convert_type(words, jnp.int32), -1, axis)
+
+
+def pack_signs(signs: Array, axis: int = -1) -> Array:
+    """Pack ±1 values (bit = 1 for +1) into int32 words."""
+    return pack_bits((signs > 0).astype(jnp.uint32), axis)
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# XNOR matmul (packed popcount path)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bkw", "interpret"))
+def xnor_matmul(
+    a_signs: Array,
+    w_signs: Array,
+    *,
+    bm: int = _xnor_kernel.DEFAULT_BM,
+    bn: int = _xnor_kernel.DEFAULT_BN,
+    bkw: int = _xnor_kernel.DEFAULT_BKW,
+    interpret: bool | None = None,
+) -> Array:
+    """±1 binary matmul via the packed XNOR+popcount Pallas kernel.
+
+    (..., m) x (m, n) -> (..., n) int32. Bit-exact vs the ±1 matmul:
+    dot = m - 2 * hamming.
+    """
+    m = a_signs.shape[-1]
+    lead = a_signs.shape[:-1]
+    a2 = a_signs.reshape(-1, m)
+    ap = pack_bits((a2 > 0).astype(jnp.uint32))
+    wp = pack_bits((w_signs > 0).astype(jnp.uint32), axis=0)
+    ap = _pad_to(_pad_to(ap, bm, 0), bkw, 1)
+    wp = _pad_to(_pad_to(wp, bkw, 0), bn, 1)
+    ham = _xnor_kernel.hamming_matmul_packed(ap, wp, bm=bm, bn=bn, bkw=bkw, interpret=interpret)
+    out = m - 2 * ham[: a2.shape[0], : w_signs.shape[1]]
+    return out.reshape(*lead, w_signs.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# WDM MMM
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bn", "bm", "interpret"))
+def wdm_mmm(
+    groups: Array,
+    w: Array,
+    *,
+    bb: int = _wdm_kernel.DEFAULT_BB,
+    bn: int = _wdm_kernel.DEFAULT_BN,
+    bm: int = _wdm_kernel.DEFAULT_BM,
+    interpret: bool | None = None,
+) -> Array:
+    """(G, K, m) x (m, n) -> (G, K, n): K wavelengths per systolic pass."""
+    g, k, m = groups.shape
+    lhs = groups.reshape(g * k, m).astype(jnp.bfloat16)
+    lhs = _pad_to(_pad_to(lhs, bb, 0), bm, 1)
+    rhs = _pad_to(_pad_to(w.astype(jnp.bfloat16), bm, 0), bn, 1)
+    out = _wdm_kernel.mmm(lhs, rhs, bb=bb, bn=bn, bm=bm, interpret=interpret)
+    return out[: g * k, : w.shape[1]].reshape(g, k, w.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# BitLinear (fused binarize + matmul + rescale)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bn", "bm", "interpret"))
+def bitlinear(
+    x: Array,
+    w_signs: Array,
+    alpha: Array,
+    *,
+    bb: int = _bitlinear_kernel.DEFAULT_BB,
+    bn: int = _bitlinear_kernel.DEFAULT_BN,
+    bm: int = _bitlinear_kernel.DEFAULT_BM,
+    interpret: bool | None = None,
+) -> Array:
+    """(..., m) fp x (m, n) ±1 x (n,) -> (..., n) fp32 fused BitLinear."""
+    m = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = _pad_to(_pad_to(x.reshape(-1, m), bb, 0), bm, 1)
+    # pad weight ROWS with zeros: pad x columns binarize to +1 and hit
+    # zero rows -> contribute nothing (see kernel docstring)
+    wp = _pad_to(_pad_to(w_signs, bm, 0), bn, 1)
+    ap = _pad_to(alpha, bn, 0)
+    out = _bitlinear_kernel.bitlinear(x2, wp, ap, bb=bb, bn=bn, bm=bm, interpret=interpret)
+    n = w_signs.shape[1]
+    rows = math.prod(lead) if lead else 1
+    return out[:rows, :n].reshape(*lead, n)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against
+these references (bit-exact for the integer paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def xnor_matmul_ref(a_signs: Array, w_signs: Array) -> Array:
+    """±1 binary matmul — ground truth for the packed XNOR+popcount kernel.
+
+    (B, m) x (m, n) -> (B, n), integer-valued.
+    """
+    return jnp.matmul(a_signs.astype(jnp.float32), w_signs.astype(jnp.float32)).astype(jnp.int32)
+
+
+def hamming_matmul_ref(a_bits: Array, w_bits: Array) -> Array:
+    """Σ_k popcount(a_k XOR w_k) over the contraction — what the packed
+    kernel accumulates internally. (B, m){0,1} x (m, n){0,1} -> (B, n)."""
+    diff = jnp.not_equal(a_bits[..., :, None, :], w_bits.T[None, :, :]).astype(jnp.int32)
+    return diff.sum(-1)
+
+
+def wdm_mmm_ref(groups: Array, w: Array) -> Array:
+    """WDM MMM oracle: (G, K, m) x (m, n) -> (G, K, n), fp32 accumulation."""
+    return jnp.einsum(
+        "gkm,mn->gkn", groups.astype(jnp.float32), w.astype(jnp.float32)
+    )
+
+
+def bitlinear_ref(x: Array, w_signs: Array, alpha: Array) -> Array:
+    """Fused binarize->matmul->rescale oracle.
+
+    out = (sign(x) @ w_signs) * alpha, sign(0) := +1, fp32 result.
+    """
+    xs = jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+    return (xs @ w_signs.astype(jnp.float32)) * alpha[None, :]
+
+
+def attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:
+    """Dense softmax attention. q (B,H,Sq,D); k/v (B,KV,Skv,D), KV | H."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    kh = jnp.repeat(k, g, axis=1)
+    vh = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kh.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vh.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, the multi-pod dry-run, and the
+train/serve drivers."""

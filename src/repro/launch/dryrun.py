@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory / cost / collective
+analysis. THE FIRST TWO LINES ABOVE MUST STAY FIRST — jax locks the
+device count at first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # (2,16,16) mesh only
+    PYTHONPATH=src python -m repro.launch.dryrun --out runs/dryrun
+
+Each cell's record is cached as JSON under --out; reruns skip completed
+cells (delete the file to force). benchmarks/roofline.py reads these.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import token_count
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.config import SHAPES, shape_applicable
+
+MODEL_FLOP_FACTOR = 6  # 6·N·D training FLOPs per token (2 fwd + 4 bwd)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D analytic FLOPs for the cell (serve: 2·N·D)."""
+    n = cfg.active_param_count()
+    toks = token_count(shape)
+    factor = 6 if shape.kind == "train" else 2
+    return factor * n * toks
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: str = "none") -> dict:
+    cfg = get_config(arch, quant=quant)
+    shape = SHAPES[shape_name]
+    runs, why = shape_applicable(cfg, shape)
+    if not runs:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    rec = hlo_analysis.analyze_compiled(compiled, n_chips)
+    mf = model_flops(cfg, shape)
+    rec.update(
+        arch=arch,
+        shape=shape_name,
+        multi_pod=multi_pod,
+        n_chips=n_chips,
+        status="ok",
+        quant=quant,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        model_flops=mf,
+        useful_flop_ratio=(mf / rec["flops"] if rec["flops"] else None),
+        tokens=token_count(shape),
+    )
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", action="append", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true", help="only the (2,16,16) mesh")
+    ap.add_argument("--single-pod", action="store_true", help="only the (16,16) mesh")
+    ap.add_argument("--quant", default="none", choices=["none", "bnn"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or list(ARCH_IDS)
+    shapes = args.shape or list(SHAPES)
+    if args.multi_pod and not args.single_pod:
+        pods = [True]
+    elif args.single_pod and not args.multi_pod:
+        pods = [False]
+    else:
+        pods = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                if args.quant != "none":
+                    tag += f"__{args.quant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod=mp, quant=args.quant)
+                except Exception as e:  # a failure here is a bug in our sharding
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape_name, "multi_pod": mp,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[dryrun] {tag}: FAILED {type(e).__name__}: {e}", flush=True)
+                    if args.fail_fast:
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        return 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    mem = rec["memory"]["peak_per_device_bytes"] / 2**30
+                    print(
+                        f"[dryrun] {tag}: ok  flops={rec['flops']:.3e} "
+                        f"mem/dev={mem:.2f}GiB coll={rec['collectives']['operand_bytes']:.3e}B "
+                        f"dominant={r['dominant']} "
+                        f"(c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s x={r['collective_s']:.2e}s) "
+                        f"compile={rec['compile_s']}s",
+                        flush=True,
+                    )
+                elif rec["status"] == "skipped":
+                    print(f"[dryrun] {tag}: skipped ({rec['reason']})", flush=True)
+    print(f"[dryrun] done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,185 @@
+"""Shared step builders: the jit-able train / prefill / decode entry
+points with their sharding pytrees, used by dryrun.py, train.py, and
+serve.py. Everything here is shape-only-safe (eval_shape + partitioner
+rules) so the dry-run can build 512-device programs without allocating.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data import make_input_specs
+from repro.distributed import (
+    batch_specs,
+    cache_specs,
+    infer_specs,
+    named_shardings,
+    opt_state_specs,
+)
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import OptConfig, adamw_init
+from repro.train.loop import TrainLoopConfig, make_train_step
+
+
+def default_opt_cfg(cfg: ModelConfig) -> OptConfig:
+    """Factored second moment for 100B+ models: the difference between
+    optimizer state fitting a 256-chip pod or not (DESIGN.md §6)."""
+    return OptConfig(factored=cfg.param_count() > 100e9)
+
+
+def param_shapes(cfg: ModelConfig, *, compute_dtype: bool = True) -> Any:
+    """Param ShapeDtypeStructs. ``compute_dtype=True`` (production) holds
+    matrices in bf16 — the fp32 master lives in the optimizer state
+    (OptConfig.master_weights), so ZeRO-3 weight all-gathers and serve
+    arguments move/hold half the bytes. 1-D params (norm scales, biases,
+    SSM A/D/dt) stay fp32 for numerics."""
+    init = encdec_lib.init_params if cfg.is_encdec else lm_lib.init_params
+    tree = jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+    if not compute_dtype:
+        return tree
+
+    def cast(l):
+        # stacked-per-layer tensors have a leading repeat dim: a "matrix"
+        # is anything with >= 2 trailing non-repeat dims -> ndim >= 2
+        dt = jnp.bfloat16 if (l.ndim >= 2 and l.dtype == jnp.float32) else l.dtype
+        return jax.ShapeDtypeStruct(l.shape, dt)
+
+    return jax.tree.map(cast, tree)
+
+
+def opt_shapes(params_sds: Any, opt_cfg: OptConfig) -> Any:
+    # params as an eval_shape ARG (not a closure) so leaves are tracers
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: (fn, arg SDS tuple, in/out shardings, donate)
+# ---------------------------------------------------------------------------
+
+
+def train_wants_fsdp(cfg: ModelConfig, shape: ShapeConfig, mesh) -> bool:
+    """ZeRO-3 batch sharding is chosen on two criteria:
+
+    **Memory criterion**: DP-only residual-stream carries (per-layer
+    remat saves) over 4 GiB/dev would blow the 16 GiB v5e budget:
+    carry = B*S/dp * d_model * 2B * layers.
+
+    A traffic criterion ("switch when napkin weight-gather bytes <
+    TP-psum bytes") was tried and REFUTED by measurement: on
+    qwen1.5-0.5b train_4k the collective term went 1.37 s -> 1.75 s
+    (+27%) — XLA's ZeRO gather pattern under remat re-gathers far more
+    than the 3x-params napkin model (EXPERIMENTS.md §Perf, cell 2 #4).
+    """
+    from repro.distributed.partitioner import data_axes, fsdp_batch_axes
+
+    if not fsdp_batch_axes(shape.global_batch, mesh):
+        return False
+    dp = 1
+    for a in data_axes(mesh):
+        dp *= mesh.shape[a]
+    layers = cfg.n_layers + cfg.n_encoder_layers
+    carry = shape.global_batch * shape.seq_len / dp * cfg.d_model * 2 * layers
+    return carry > 4 * 2**30
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """Everything needed to jit/lower one (arch x shape) cell."""
+    from repro.distributed.partitioner import fsdp_batch_axes
+
+    specs = make_input_specs(cfg, shape)
+    p_sds = param_shapes(cfg)
+    fsdp = shape.kind == "train" and train_wants_fsdp(cfg, shape, mesh)
+    p_spec = infer_specs(p_sds, mesh, fsdp=fsdp)
+    p_sh = named_shardings(p_spec, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = default_opt_cfg(cfg)
+        o_sds = opt_shapes(p_sds, opt_cfg)
+        o_spec = opt_state_specs(p_spec, o_sds)
+        o_sh = named_shardings(o_spec, mesh)
+        b_sh = named_shardings(batch_specs(specs, mesh, fsdp=fsdp), mesh)
+        loop = TrainLoopConfig(total_steps=10_000, warmup_steps=100)
+        fn = make_train_step(cfg, opt_cfg, loop)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = NamedSharding(mesh, P())
+        return {
+            "fn": fn,
+            "args": (p_sds, o_sds, specs, step_sds),
+            "in_shardings": (p_sh, o_sh, b_sh, rep),
+            "out_shardings": (p_sh, o_sh, None),
+            "donate_argnums": (0, 1),
+            "hint_kw": (
+                {"batch_axes": fsdp_batch_axes(shape.global_batch, mesh), "tp": False}
+                if fsdp
+                else {}
+            ),
+        }
+
+    if shape.kind == "prefill":
+        b_sh = named_shardings(batch_specs(specs, mesh), mesh)
+        if cfg.is_encdec:
+            def fn(params, batch):
+                return encdec_lib.prefill(params, batch["src_embeds"], batch["tokens"], cfg)
+        elif cfg.frontend == "vision":
+            def fn(params, batch):
+                return lm_lib.prefill(params, batch["tokens"], cfg, batch["extra_embeds"])
+        else:
+            def fn(params, batch):
+                return lm_lib.prefill(params, batch["tokens"], cfg)
+        # out: logits data-sharded over batch; caches SP-sharded
+        cache_sds = jax.eval_shape(fn, p_sds, specs)[1]
+        c_sh = named_shardings(cache_specs(cache_sds, mesh), mesh)
+        logits_sh = named_shardings(
+            batch_specs(jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.float32), mesh),
+            mesh,
+        )
+        return {
+            "fn": fn,
+            "args": (p_sds, specs),
+            "in_shardings": (p_sh, b_sh),
+            "out_shardings": (logits_sh, c_sh),
+            "donate_argnums": (),
+        }
+
+    # decode: one token against a seq_len-deep cache
+    decode = encdec_lib.decode_step if cfg.is_encdec else lm_lib.decode_step
+
+    def fn(params, token, pos, caches):
+        return decode(params, token, pos, caches, cfg)
+
+    tok_sh = named_shardings(batch_specs(specs["token"], mesh), mesh)
+    c_sh = named_shardings(cache_specs(specs["caches"], mesh), mesh)
+    rep = NamedSharding(mesh, P())
+    logits_sh = named_shardings(
+        batch_specs(jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.float32), mesh), mesh
+    )
+    return {
+        "fn": fn,
+        "args": (p_sds, specs["token"], specs["pos"], specs["caches"]),
+        "in_shardings": (p_sh, tok_sh, rep, c_sh),
+        "out_shardings": (logits_sh, c_sh),
+        "donate_argnums": (3,),
+    }
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """jit(...).lower(...) for one cell — the dry-run's core call."""
+    from repro.distributed.hints import activation_hints
+
+    cell = build_cell(cfg, shape, mesh)
+    jitted = jax.jit(
+        cell["fn"],
+        in_shardings=cell["in_shardings"],
+        out_shardings=cell["out_shardings"],
+        donate_argnums=cell["donate_argnums"],
+    )
+    with mesh, activation_hints(mesh, **cell.get("hint_kw", {})):
+        lowered = jitted.lower(*cell["args"])
+    return lowered

@@ -1,0 +1,11 @@
+"""LM-family model zoo sharing one scan/remat spine (see lm.py).
+
+  config.py   ModelConfig schema + ShapeConfig cells + layer patterns
+  layers.py   RMSNorm / RoPE / GQA flash attention / SwiGLU (+ BNN quant)
+  moe.py      top-k capacity-bounded Mixture-of-Experts
+  ssm.py      Mamba-2 SSD mixer (chunked matmul scan + decode step)
+  lm.py       decoder-only spine: dense / MoE / SSM / hybrid via patterns
+  encdec.py   encoder-decoder (seamless-m4t style) with cross-attention
+"""
+
+from repro.models import config, encdec, layers, lm, moe, ssm

@@ -1,0 +1,187 @@
+"""Model / shape configuration for the assigned architecture pool.
+
+One frozen dataclass covers all ten families (dense / MoE / SSM /
+hybrid / enc-dec / VLM / audio). Exact per-arch numbers live in
+``repro/configs/<id>.py``; this module defines the schema and the
+layer-pattern machinery that lets heterogeneous stacks (Jamba's
+attn:mamba 1:7 with interleaved MoE) compile as a scan over repeats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    """One slot in the repeating layer pattern."""
+
+    mixer: Literal["attn", "mamba"] = "attn"
+    moe: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_groups: int = 1
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    # layer pattern (period P; n_layers % P == 0)
+    pattern: tuple[LayerKind, ...] = (LayerKind(),)
+    # enc-dec
+    n_encoder_layers: int = 0        # >0 => enc-dec model
+    # modality frontend stub (input_specs provides embeddings)
+    frontend: Literal["none", "vision", "audio"] = "none"
+    frontend_len: int = 256          # patches / frames per sample
+    # quantization: "none" or "bnn" (the paper's technique as a feature)
+    quant: Literal["none", "bnn"] = "none"
+    # misc
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    loss_chunk: int = 256            # sequence chunking for the softmax loss
+    attn_chunk: int = 512            # flash-style KV chunk (jnp impl)
+    # "jnp": scan-based flash (lowers everywhere, scores hit HBM).
+    # "pallas": fused kernel, scores stay in VMEM (TPU; interpret on CPU)
+    attn_impl: Literal["jnp", "pallas"] = "jnp"
+    # "pjit": SPMD-inferred MoE (EP when the layout allows, ZeRO gather
+    # otherwise). "ep_shard_map": hand-written all_to_all dispatch —
+    # expert weights never move (distributed/ep.py); requires
+    # E % model_axis == 0 and an active hints mesh.
+    moe_impl: Literal["pjit", "ep_shard_map"] = "pjit"
+    remat: bool = True
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError(f"{self.name}: n_layers {self.n_layers} not divisible by pattern {len(self.pattern)}")
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head tables pad the vocab to a multiple of 256 so
+        vocab-parallel sharding always divides any production mesh axis
+        (an odd vocab like seamless' 256206 otherwise forces a
+        replicated-V loss: full-vocab fp32 head grads psum'd per chunk —
+        measured as a 3 s/step collective term, EXPERIMENTS.md §Perf).
+        Logits beyond ``vocab_size`` are masked to -inf everywhere."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def n_repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def has_attn(self) -> bool:
+        return any(k.mixer == "attn" for k in self.pattern) or self.is_encdec
+
+    @property
+    def has_mamba(self) -> bool:
+        return any(k.mixer == "mamba" for k in self.pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k+ context? (SSM/hybrid families.)"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model FLOPs and reports)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_kind = {}
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        ffn_dense = 3 * d * self.d_ff
+        ffn_moe = self.moe_experts * 3 * d * self.d_ff + d * self.moe_experts
+        mamba = (
+            d * (2 * self.d_inner + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads)
+            + self.d_inner * d
+            + (self.d_inner + 2 * self.ssm_groups * self.ssm_state) * self.ssm_conv
+            + 3 * self.ssm_heads
+        )
+        total = emb
+        for kind in self.pattern:
+            mix = attn if kind.mixer == "attn" else mamba
+            ff = ffn_moe if kind.moe else ffn_dense
+            per_kind[kind] = mix + ff + 2 * d
+            total += self.n_repeats * (mix + ff + 2 * d)
+        if self.is_encdec:  # encoder layers: self-attn + dense ffn; decoder adds cross-attn
+            total += self.n_encoder_layers * (attn + ffn_dense + 2 * d)
+            total += self.n_layers * attn  # cross-attention blocks
+        total += d  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k of experts)."""
+        if self.moe_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        full_ffn = self.moe_experts * 3 * d * self.d_ff
+        active_ffn = self.moe_top_k * 3 * d * self.d_ff
+        n_moe_layers = sum(1 for k in self.pattern) and sum(
+            self.n_repeats for k in self.pattern if k.moe
+        )
+        return self.param_count() - n_moe_layers * (full_ffn - active_ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell's input geometry."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Implements the brief's skip rules; returns (runs?, reason)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: O(s^2) attention at 524k skipped (DESIGN.md §5)"
+    return True, ""

@@ -1,0 +1,211 @@
+"""Encoder-decoder transformer (seamless-m4t style): bidirectional
+encoder over frontend embeddings (audio frames — stub per the brief),
+causal decoder with per-layer cross-attention. Same scan/remat spine as
+``lm.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ACT_DTYPE,
+    attention_block,
+    attention_decode_step,
+    attn_init,
+    cross_attention_block,
+    decode_attention,
+    dense,
+    ffn,
+    ffn_init,
+    rms_norm,
+)
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def _init_enc_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_init(k1, cfg),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": ffn_init(k2, cfg),
+    }
+
+
+def _init_dec_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_attn": attn_init(k1, cfg),
+        "norm_x": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross_attn": attn_init(k2, cfg),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": ffn_init(k3, cfg),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    vp = cfg.padded_vocab  # tables padded for vocab-parallel sharding
+    return {
+        "embed": jax.random.normal(ks[2], (vp, cfg.d_model), jnp.float32) * 0.02,
+        "head": jax.random.normal(ks[3], (cfg.d_model, vp), jnp.float32)
+        * (1.0 / math.sqrt(cfg.d_model)),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(params: Params, src_embeds: Array, cfg: ModelConfig) -> Array:
+    """Bidirectional encoder over (B, Ss, d) frontend embeddings."""
+    h = src_embeds.astype(ACT_DTYPE)
+    positions = jnp.arange(src_embeds.shape[1])
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        mix, _ = attention_block(lp["attn"], hn, positions, cfg, causal=False, quant=cfg.quant)
+        h = h + mix
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        return h + ffn(lp["ffn"], hn, cfg.quant), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["enc_blocks"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp: Params, enc_out: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    b, ss, _ = enc_out.shape
+    k = dense(lp["cross_attn"]["k"], enc_out, cfg.quant).reshape(b, ss, cfg.n_kv_heads, cfg.hd)
+    v = dense(lp["cross_attn"]["v"], enc_out, cfg.quant).reshape(b, ss, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def decoder(params: Params, enc_out: Array, tgt_tokens: Array, cfg: ModelConfig) -> Array:
+    """Training decoder pass -> (B, St, d) hidden states."""
+    h = params["embed"][tgt_tokens].astype(ACT_DTYPE)
+    positions = jnp.arange(tgt_tokens.shape[1])
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        mix, _ = attention_block(lp["self_attn"], hn, positions, cfg, quant=cfg.quant)
+        h = h + mix
+        hn = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        kv = _cross_kv(lp, enc_out, cfg)
+        h = h + cross_attention_block(lp["cross_attn"], hn, kv, positions, cfg, cfg.quant)
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        return h + ffn(lp["ffn"], hn, cfg.quant), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["dec_blocks"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.0) -> Array:
+    """batch = {src_embeds (B,Ss,d), tokens (B,St)} — next-token loss."""
+    from repro.models.lm import lm_loss  # shared chunked loss
+
+    enc_out = encode(params, batch["src_embeds"], cfg)
+    hidden = decoder(params, enc_out, batch["tokens"], cfg)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, tokens.dtype)], axis=1
+    )
+
+    class _Cfg:  # lm_loss reads head/tying, chunking and vocab fields
+        tie_embeddings = False
+        loss_chunk = cfg.loss_chunk
+        vocab_size = cfg.vocab_size
+        padded_vocab = cfg.padded_vocab
+
+    return lm_loss({"head": params["head"]}, hidden, targets, _Cfg)
+
+
+def prefill(params: Params, src_embeds: Array, tgt_tokens: Array, cfg: ModelConfig):
+    """Encode src, run decoder over the prompt, return (logits, caches).
+
+    caches = {self: stacked (L,B,St,KV,hd) k/v, cross: stacked k/v over
+    the full encoder output, used read-only during decode}.
+    """
+    enc_out = encode(params, src_embeds, cfg)
+    positions = jnp.arange(tgt_tokens.shape[1])
+    h = params["embed"][tgt_tokens].astype(ACT_DTYPE)
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        mix, (k, v) = attention_block(lp["self_attn"], hn, positions, cfg, quant=cfg.quant)
+        h = h + mix
+        hn = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        ck, cv = _cross_kv(lp, enc_out, cfg)
+        h = h + cross_attention_block(lp["cross_attn"], hn, (ck, cv), positions, cfg, cfg.quant)
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + ffn(lp["ffn"], hn, cfg.quant)
+        cache = {
+            "self_k": k.astype(ACT_DTYPE),
+            "self_v": v.astype(ACT_DTYPE),
+            "cross_k": ck.astype(ACT_DTYPE),
+            "cross_v": cv.astype(ACT_DTYPE),
+        }
+        return h, cache
+
+    h, caches = jax.lax.scan(body, h, params["dec_blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32), params["head"])
+    from repro.models.lm import _mask_padded_vocab
+
+    return _mask_padded_vocab(logits, cfg), caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int, dtype=ACT_DTYPE):
+    l = cfg.n_layers
+    kv = (l, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    cross = (l, batch, src_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "self_k": jnp.zeros(kv, dtype),
+        "self_v": jnp.zeros(kv, dtype),
+        "cross_k": jnp.zeros(cross, dtype),
+        "cross_v": jnp.zeros(cross, dtype),
+    }
+
+
+def decode_step(params: Params, token: Array, pos: Array, caches: dict, cfg: ModelConfig):
+    """One decoder step with fixed cross-KV. token (B,), pos scalar."""
+    b = token.shape[0]
+    h = params["embed"][token[:, None]].astype(ACT_DTYPE)
+
+    def body(h, xs):
+        lp, cache_l = xs
+        hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        mix, nk, nv = attention_decode_step(
+            lp["self_attn"], hn, pos, cache_l["self_k"], cache_l["self_v"], cfg, quant=cfg.quant
+        )
+        h = h + mix
+        hn = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        q = dense(lp["cross_attn"]["q"], hn, cfg.quant).reshape(b, 1, cfg.n_heads, cfg.hd)
+        src_len = cache_l["cross_k"].shape[1]
+        cross = decode_attention(
+            q, cache_l["cross_k"], cache_l["cross_v"], jnp.full((b,), src_len, jnp.int32)
+        )
+        h = h + dense(lp["cross_attn"]["o"], cross.reshape(b, 1, cfg.n_heads * cfg.hd), cfg.quant)
+        hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + ffn(lp["ffn"], hn, cfg.quant)
+        new_cache = dict(cache_l, self_k=nk, self_v=nv)
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["dec_blocks"], caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0, :].astype(jnp.float32), params["head"])
+    from repro.models.lm import _mask_padded_vocab
+
+    return _mask_padded_vocab(logits, cfg), new_caches

@@ -1,0 +1,321 @@
+"""Decoder-only LM assembled from the layer pattern (dense / MoE / SSM /
+hybrid all share this spine).
+
+Scan-over-repeats with stacked per-slot parameters keeps the HLO O(1)
+in depth (an 80-layer qwen2 lowers as one scanned block), and
+``jax.checkpoint`` on the scan body gives per-layer activation
+rematerialization. The softmax loss is sequence-chunked so the full
+(B, S, V) logits tensor never materializes (a 152k vocab at 1M tokens
+would otherwise dominate memory).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ACT_DTYPE,
+    attention_block,
+    attention_decode_step,
+    attn_init,
+    dense,
+    ffn,
+    ffn_init,
+    rms_norm,
+)
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _has_ffn(kind, cfg: ModelConfig) -> bool:
+    """mamba2-style stacks set d_ff=0: the block is mixer-only."""
+    return kind.moe or cfg.d_ff > 0
+
+
+def _init_slot(key: jax.Array, kind, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_init(k1, cfg)
+    else:
+        p["mamba"] = ssm_lib.mamba_init(k1, cfg)
+    if _has_ffn(kind, cfg):
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if kind.moe:
+            p["moe"] = moe_lib.moe_init(k2, cfg)
+        else:
+            p["ffn"] = ffn_init(k2, cfg)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, len(cfg.pattern) + 3)
+    vp = cfg.padded_vocab  # tables padded for vocab-parallel sharding
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (vp, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(keys[1], (cfg.d_model, vp), jnp.float32) * (
+            1.0 / math.sqrt(cfg.d_model)
+        )
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern):
+        slot_keys = jax.random.split(keys[3 + i - 1], cfg.n_repeats)
+        blocks[f"slot{i}"] = jax.vmap(lambda k: _init_slot(k, kind, cfg))(slot_keys)
+    params["blocks"] = blocks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) — scan over repeats, remat per repeat
+# ---------------------------------------------------------------------------
+
+
+def _apply_repeat(h: Array, slot_params: Params, positions: Array, cfg: ModelConfig):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.pattern):
+        sp = slot_params[f"slot{i}"]
+        hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
+        if kind.mixer == "attn":
+            mix, _ = attention_block(sp["attn"], hn, positions, cfg, quant=cfg.quant)
+        else:
+            mix, _ = ssm_lib.mamba_block(sp["mamba"], hn, cfg)
+        h = h + mix
+        if _has_ffn(kind, cfg):
+            hn = rms_norm(h, sp["norm2"], cfg.norm_eps)
+            if kind.moe:
+                f, a = _moe(sp["moe"], hn, cfg)
+                aux = aux + a
+            else:
+                f = ffn(sp["ffn"], hn, cfg.quant)
+            h = h + f
+    return h, aux
+
+
+def _moe(p: Params, hn: Array, cfg: ModelConfig):
+    """MoE with selectable dispatch (ModelConfig.moe_impl)."""
+    if cfg.moe_impl == "ep_shard_map":
+        from repro.distributed.ep import ep_moe_ffn
+        from repro.distributed.hints import current_mesh
+
+        mesh = current_mesh()
+        if (
+            mesh is not None
+            and "model" in mesh.shape
+            and cfg.moe_experts % mesh.shape["model"] == 0
+            and (hn.shape[0] * hn.shape[1]) % mesh.shape["model"] == 0
+        ):
+            return ep_moe_ffn(p, hn, cfg, mesh)
+    return moe_lib.moe_ffn(p, hn, cfg)
+
+
+def backbone(params: Params, embeds: Array, positions: Array, cfg: ModelConfig):
+    """(B, S, d) -> (hidden (B, S, d), moe_aux scalar)."""
+    from repro.models.scan import remat_scan
+
+    h = hint(embeds.astype(ACT_DTYPE), "dp", None, None)
+
+    def body(carry, slot_p):
+        h, aux = carry
+        h = hint(h, "dp", None, None)  # re-pin batch sharding in the remat replay
+        h2, a = _apply_repeat(h, slot_p, positions, cfg)
+        return (hint(h2, "dp", None, None), aux + a)
+
+    carry0 = (h, jnp.zeros((), jnp.float32))
+    if cfg.remat:
+        # remat_scan: per-layer recompute with a SINGLE bf16 residual
+        # stack (scan+checkpoint writes an extra fp32 stack — see
+        # models/scan.py)
+        h, aux = remat_scan(body, carry0, params["blocks"])
+    else:
+        (h, aux), _ = jax.lax.scan(lambda c, x: (body(c, x), None), carry0, params["blocks"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def embed_tokens(params: Params, tokens: Array) -> Array:
+    return params["embed"][tokens]
+
+
+def _head_weights(params: Params, cfg: ModelConfig) -> Array:
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def _mask_padded_vocab(logits: Array, cfg: ModelConfig) -> Array:
+    """-inf on the padding columns (see ModelConfig.padded_vocab)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    valid = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    return jnp.where(valid, logits, -1e30)
+
+
+def lm_loss(params: Params, hidden: Array, targets: Array, cfg: ModelConfig) -> Array:
+    """Sequence-chunked softmax cross-entropy. targets < 0 are masked."""
+    w = _head_weights(params, cfg)
+    b, s, d = hidden.shape
+    ck = min(cfg.loss_chunk, s)
+    pad = (-s) % ck
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // ck
+    hs = hidden.reshape(b, nc, ck, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nc, ck).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(acc, xs):
+        # checkpointed: the backward recomputes this chunk's logits
+        # instead of saving a (B, ck, V) fp32 tensor per chunk — without
+        # this the loss scan alone materializes the full (B, S, V)
+        # logits (tens of GiB/device at 150k vocabs).
+        hc, tc = xs
+        # vocab-parallel loss: batch over the pure-DP axes only; the
+        # model axis belongs to the vocab dim of w/logits here
+        hc = hint(hc, "dp_strict", None, None)
+        logits = jnp.einsum("bsd,dv->bsv", hc.astype(jnp.float32), w)
+        logits = hint(_mask_padded_vocab(logits, cfg), "dp_strict", None, "model_strict")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        mask = (tc >= 0).astype(jnp.float32)
+        n_tok, tot = acc
+        return (n_tok + mask.sum(), tot + ((lse - ll) * mask).sum()), None
+
+    (n_tok, total), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (hs, ts))
+    return total / jnp.maximum(n_tok, 1.0)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.01) -> Array:
+    """Next-token loss over a {tokens, (optional) extra_embeds} batch."""
+    tokens = batch["tokens"]
+    embeds = embed_tokens(params, tokens)
+    if "extra_embeds" in batch:  # modality frontend stub (VLM)
+        embeds = jnp.concatenate([batch["extra_embeds"].astype(embeds.dtype), embeds], axis=1)
+    positions = jnp.arange(embeds.shape[1])
+    hidden, aux = backbone(params, embeds, positions, cfg)
+    n_extra = embeds.shape[1] - tokens.shape[1]
+    hidden = hidden[:, n_extra:, :]
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, tokens.dtype)], axis=1
+    )
+    return lm_loss(params, hidden, targets, cfg) + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def _apply_repeat_prefill(h: Array, slot_params: Params, positions: Array, cfg: ModelConfig):
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        sp = slot_params[f"slot{i}"]
+        hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
+        if kind.mixer == "attn":
+            mix, (k, v) = attention_block(sp["attn"], hn, positions, cfg, quant=cfg.quant)
+            caches[f"slot{i}"] = {"k": k.astype(ACT_DTYPE), "v": v.astype(ACT_DTYPE)}
+        else:
+            mix, st = ssm_lib.mamba_block(sp["mamba"], hn, cfg)
+            caches[f"slot{i}"] = st
+        h = h + mix
+        if _has_ffn(kind, cfg):
+            hn = rms_norm(h, sp["norm2"], cfg.norm_eps)
+            if kind.moe:
+                f, _ = moe_lib.moe_ffn(sp["moe"], hn, cfg)
+            else:
+                f = ffn(sp["ffn"], hn, cfg.quant)
+            h = h + f
+    return h, caches
+
+
+def prefill(params: Params, tokens: Array, cfg: ModelConfig, extra_embeds: Array | None = None):
+    """Forward pass that also returns stacked per-layer caches and the
+    last-position logits. Cache seq capacity == prompt length (callers
+    pad to their serving window). ``extra_embeds`` (B, L, d) prepends
+    modality-frontend embeddings (VLM prefill)."""
+    embeds = embed_tokens(params, tokens)
+    if extra_embeds is not None:
+        embeds = jnp.concatenate([extra_embeds.astype(embeds.dtype), embeds], axis=1)
+    positions = jnp.arange(embeds.shape[1])
+    h = embeds.astype(ACT_DTYPE)
+
+    def body(h, slot_p):
+        h2, caches = _apply_repeat_prefill(h, slot_p, positions, cfg)
+        return h2, caches
+
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = _head_weights(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32), w)
+    return _mask_padded_vocab(logits, cfg), caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=ACT_DTYPE) -> Params:
+    """Zero-initialized decode cache pytree (stacked over repeats)."""
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        r = cfg.n_repeats
+        if kind.mixer == "attn":
+            shape = (r, batch, max_len, cfg.n_kv_heads, cfg.hd)
+            caches[f"slot{i}"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        else:
+            tail, gn = cfg.ssm_conv - 1, cfg.ssm_groups * cfg.ssm_state
+            caches[f"slot{i}"] = {
+                "conv_x": jnp.zeros((r, batch, tail, cfg.d_inner), dtype),
+                "conv_b": jnp.zeros((r, batch, tail, gn), dtype),
+                "conv_c": jnp.zeros((r, batch, tail, gn), dtype),
+                "ssm": jnp.zeros(
+                    (r, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+                ),
+            }
+    return caches
+
+
+def decode_step(params: Params, token: Array, pos: Array, caches: Params, cfg: ModelConfig):
+    """One serving step: token (B,) int32, pos scalar int32, caches from
+    ``init_cache``/``prefill``. Returns (logits (B, V), new_caches)."""
+    embeds = embed_tokens(params, token[:, None])  # (B, 1, d)
+    h = embeds.astype(ACT_DTYPE)
+
+    def body(h, xs):
+        slot_p, cache_r = xs
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            sp, cp = slot_p[f"slot{i}"], cache_r[f"slot{i}"]
+            hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
+            if kind.mixer == "attn":
+                mix, nk, nv = attention_decode_step(
+                    sp["attn"], hn, pos, cp["k"], cp["v"], cfg, quant=cfg.quant
+                )
+                new_cache[f"slot{i}"] = {"k": nk, "v": nv}
+            else:
+                mix, st = ssm_lib.mamba_step(sp["mamba"], hn, cp, cfg)
+                new_cache[f"slot{i}"] = st
+            h = h + mix
+            if _has_ffn(kind, cfg):
+                hn = rms_norm(h, sp["norm2"], cfg.norm_eps)
+                if kind.moe:
+                    f, _ = moe_lib.moe_ffn(sp["moe"], hn, cfg)
+                else:
+                    f = ffn(sp["ffn"], hn, cfg.quant)
+                h = h + f
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = _head_weights(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0, :].astype(jnp.float32), w)
+    return _mask_padded_vocab(logits, cfg), new_caches

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded scatter
+dispatch (Switch/GShard style).
+
+Design notes for the 1000-node posture:
+
+* No (S, E, C) one-hot dispatch tensor — at 1M tokens x 128 experts that
+  is astronomically large. Instead tokens scatter into a dense
+  (B, E, C, d) expert buffer via per-row ``.at[].add`` (XLA lowers to a
+  sort-based scatter), keeping the biggest intermediate at
+  S·k·capacity_factor token slots — the same asymptotics as the real
+  top-k compute.
+* The (B, S, E) router tensors shard over (batch=data, experts=model);
+  position-in-expert uses an fp32 cumsum (exact for S·k < 2^24).
+* Tokens over capacity are dropped (contribute zero) — standard; the
+  auxiliary load-balancing loss keeps the drop rate low in training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint
+from repro.models.config import ModelConfig
+from repro.models.layers import ACT_DTYPE, dense_init
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    s1, s2 = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s1,
+        "w1": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s1,
+        "w3": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s1,
+        "w2": jax.random.normal(ks[3], (e, f, d), jnp.float32) * s2,
+    }
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    return max(1, math.ceil(seq * cfg.moe_top_k / cfg.moe_experts * cfg.moe_capacity_factor))
+
+
+def _dispatch_row(x_rep: Array, e_idx: Array, slot: Array, keep: Array, e: int, c: int) -> Array:
+    """One batch row: scatter (S*k, d) token copies into (E, C, d)."""
+    buf = jnp.zeros((e, c, x_rep.shape[-1]), x_rep.dtype)
+    upd = x_rep * keep[:, None].astype(x_rep.dtype)
+    return buf.at[e_idx, slot].add(upd, mode="drop")
+
+
+def _combine_row(expert_out: Array, e_idx: Array, slot: Array, keep: Array) -> Array:
+    """Gather (S*k, d) results back out of (E, C, d)."""
+    got = expert_out[e_idx, slot]
+    return got * keep[:, None].astype(got.dtype)
+
+
+def moe_ffn(p: Params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """(B, S, d) -> (B, S, d), plus the load-balancing aux loss.
+
+    Routing/renormalized gates follow Mixtral/Qwen-MoE: softmax over all
+    experts, take top-k, renormalize the k gates.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    c = capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, top_idx = jax.lax.top_k(probs, k)                  # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, expert) assignment within its expert
+    flat_e = top_idx.reshape(b, s * k)                        # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)     # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1.0                    # fp32 exact < 2^24
+    slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)   # (B, S*k)
+    keep = slot < c
+
+    x_rep = jnp.repeat(x, k, axis=1)                          # (B, S*k, d)
+    expert_in = jax.vmap(_dispatch_row, in_axes=(0, 0, 0, 0, None, None))(
+        x_rep, flat_e, slot, keep, e, c
+    )                                                         # (B, E, C, d)
+    # EP anchor: expert dim over the model axis (the scatter above
+    # becomes the all-to-all dispatch); falls back to ffn-dim TP inside
+    # the einsums when E doesn't divide (grok's 8 experts on tp=16).
+    # NOTE deliberately NOT strict: in FSDP/ZeRO-3 mode (batch owns the
+    # model axis) forcing EP here makes XLA SPMD replicate the dispatch
+    # instead of emitting an all-to-all (measured 47 -> 542 GiB/dev on
+    # qwen3 train — EXPERIMENTS.md §Perf); the graceful degradation
+    # (ZeRO weight-gather per MoE layer) is the better SPMD-expressible
+    # layout, and a hand-written shard_map EP dispatch is the documented
+    # path beyond it.
+    expert_in = hint(expert_in, "dp", "model", None, None)
+
+    h = jnp.einsum("becd,edf->becf", expert_in, p["w1"].astype(expert_in.dtype))
+    g = jnp.einsum("becd,edf->becf", expert_in, p["w3"].astype(expert_in.dtype))
+    # (f-dim TP in the fallback case propagates from the weight specs)
+    h = hint(jax.nn.silu(h.astype(jnp.float32)).astype(ACT_DTYPE) * g.astype(ACT_DTYPE),
+             "dp", "model", None, None)
+    out_e = hint(jnp.einsum("becf,efd->becd", h, p["w2"].astype(h.dtype)),
+                 "dp", "model", None, None)
+
+    y_rep = jax.vmap(_combine_row)(out_e, flat_e, slot, keep)  # (B, S*k, d)
+    y = (y_rep.reshape(b, s, k, d) * gates[..., None].astype(y_rep.dtype)).sum(axis=2)
+
+    # GShard load-balance loss: E * Σ_e f_e * P_e
+    frac = jnp.mean(onehot.reshape(b, s, k, e).sum(2), axis=(0, 1))  # tokens/expert
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob)
+    return y.astype(x.dtype), aux

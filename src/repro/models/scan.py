@@ -1,0 +1,64 @@
+"""remat_scan — scan-over-layers with an explicit bf16 residual policy.
+
+Why this exists (measured on qwen2-72b train_4k, 256 chips):
+``jax.lax.scan(jax.checkpoint(body))`` materializes the per-layer carry
+residual stack in **fp32 regardless of the carry dtype**, *in addition
+to* a bf16 stack — 3x the optimal residual memory (10 GiB fp32 + 5 GiB
+bf16 per device where 5 GiB suffices). A minimal repro (pure bf16
+matmul body) shows the fp32 stack is written by scan's linearization
+itself, not by any op inside the body (tests/test_remat_scan.py).
+
+``remat_scan(body, carry, xs)`` is a drop-in for that pattern with a
+hand-written VJP:
+
+* forward: one scan, stacking the layer-INPUT carries in their own
+  dtype (bf16 stays bf16) — the only O(L x B x S x d) buffer;
+* backward: a reverse scan; each step recomputes its layer from the
+  saved carry (jax.vjp = remat) and transposes — identical semantics to
+  jax.checkpoint, minus the duplicated fp32 stack.
+
+body: (carry, x) -> carry (same pytree structure/dtypes). Per-layer
+outputs (ys) are deliberately unsupported — the training spine
+accumulates scalars in the carry instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+Carry = Any
+
+
+def remat_scan(body: Callable[[Carry, Any], Carry], carry: Carry, xs: Any) -> Carry:
+    @jax.custom_vjp
+    def run(carry, xs):
+        out, _ = jax.lax.scan(lambda c, x: (body(c, x), None), carry, xs)
+        return out
+
+    def fwd(carry, xs):
+        def step(c, x):
+            return body(c, x), c  # save the INPUT carry, own dtype
+
+        out, stack = jax.lax.scan(step, carry, xs)
+        return out, (stack, xs)
+
+    def bwd(res, g):
+        stack, xs = res
+
+        def step(gc, inp):
+            c_in, x = inp
+            # barrier: without it XLA hoists the body's fp32 upcast out
+            # of the loop as convert(WHOLE stack) — re-introducing the
+            # fp32 stack this function exists to avoid
+            c_in = jax.lax.optimization_barrier(c_in)
+            _, vjp = jax.vjp(body, c_in, x)
+            dc, dx = vjp(gc)
+            return dc, dx
+
+        g0, dxs = jax.lax.scan(step, g, (stack, xs), reverse=True)
+        return g0, dxs
+
+    run.defvjp(fwd, bwd)
+    return run(carry, xs)

@@ -1,0 +1,262 @@
+"""Mamba-2 (SSD — state-space duality) mixer, TPU-native.
+
+The SSD formulation is chosen deliberately (DESIGN.md §3): the chunked
+algorithm turns the selective-scan recurrence into *matmuls* — intra-
+chunk (Q x Q) attention-like blocks and inter-chunk state carries — so
+the MXU does the heavy lifting, vs. the GPU kernel's warp-level scan.
+Chunks map onto the 128-lane register file (Q=128/256); all decays are
+computed in fp32.
+
+Sharding note: the input projections are deliberately UNFUSED (z / x /
+B / C / dt as separate weights) so each output dim shards cleanly over
+the model axis — a fused ``in_proj`` would make the z/x/B/C slice
+boundaries cross shard boundaries and force XLA to reshard (all-gather)
+every layer. With the unfused layout, x/z/dt shard on d_inner (head-
+parallel SSD), B/C (tiny, ``groups*state`` wide) replicate, and
+``out_proj`` contracts over the sharded d_inner with one psum — the
+Megatron pattern, adapted to SSM.
+
+Shapes: x (B, S, H, P); dt (B, S, H); A (H,); B/C (B, S, G, N) with
+heads grouped G | H (multi-value attention analogy from the paper).
+
+Used by ``mamba2-2.7b`` (pure SSM stack) and Jamba's mamba layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint
+from repro.models.config import ModelConfig
+from repro.models.layers import ACT_DTYPE, dense_init, rms_norm
+
+Array = jax.Array
+Params = dict[str, Any]
+
+SSD_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        # unfused projections (see module docstring for why)
+        "z_proj": dense_init(ks[0], d, di),
+        "x_proj": dense_init(ks[1], d, di),
+        "b_proj": dense_init(ks[2], d, g * n),
+        "c_proj": dense_init(ks[3], d, g * n),
+        "dt_proj": dense_init(ks[4], d, h),
+        # depthwise causal conv, split to match the unfused channels
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, di), jnp.float32)
+        * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jax.random.normal(ks[6], (cfg.ssm_conv, g * n), jnp.float32)
+        * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_c": jax.random.normal(ks[7], (cfg.ssm_conv, g * n), jnp.float32)
+        * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_bias_x": jnp.zeros((di,), jnp.float32),
+        "conv_bias_b": jnp.zeros((g * n,), jnp.float32),
+        "conv_bias_c": jnp.zeros((g * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 1e-2, jnp.float32))),  # softplus^-1
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """(B, S, C) depthwise causal conv, kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # small static K (4): unrolled shifts beat conv_general here
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def conv_step(state: Array, xt: Array, w: Array, b: Array) -> tuple[Array, Array]:
+    """Decode: state (B, K-1, C), xt (B, C) -> (new_state, yt)."""
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # (B, K, C)
+    yt = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) + b
+    return window[:, 1:, :], yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array, chunk: int = SSD_CHUNK
+) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, g, n)
+    cc = c_mat.reshape(bsz, nc, q, g, n)
+
+    da = dtc * a  # (B,nc,Q,H), a < 0
+    cum = jnp.cumsum(da, axis=2)
+
+    # --- intra-chunk (diagonal blocks): attention-like QxQ matmuls ------
+    ci = cum.transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    l_mat = jnp.exp(ci[..., :, None] - ci[..., None, :])
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri, l_mat, 0.0)
+    cb = jnp.einsum("bnqgs,bnkgs->bngqk", cc.astype(jnp.float32), bc.astype(jnp.float32))
+    cb = jnp.repeat(cb, rep, axis=2)  # groups -> heads (B,nc,H,Q,Q)
+    m = cb * l_mat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", m, xc.astype(jnp.float32))
+
+    # --- chunk end-states ------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    xw = xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None]
+    bh = jnp.repeat(bc, rep, axis=3)  # (B,nc,Q,H,N)
+    states = jnp.einsum("bnkhs,bnkhp->bnhsp", bh.astype(jnp.float32), xw)
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp
+        return st + hprev * dec[..., None, None], hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, hprevs = jax.lax.scan(
+        scan_fn, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    hprevs = hprevs.swapaxes(0, 1)  # (B,nc,H,N,P)
+
+    # --- off-diagonal contribution ---------------------------------------
+    ch = jnp.repeat(cc, rep, axis=3)  # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bnqhs,bnhsp->bnqhp", ch.astype(jnp.float32), hprevs)
+    y_off = y_off * jnp.exp(cum)[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(
+    state: Array, xt: Array, dtt: Array, a: Array, bt: Array, ct: Array
+) -> tuple[Array, Array]:
+    """One decode step. state (B,H,N,P); xt (B,H,P); dtt (B,H);
+    bt/ct (B,G,N). Returns (new_state, yt (B,H,P))."""
+    h, g = xt.shape[1], bt.shape[1]
+    rep = h // g
+    decay = jnp.exp(dtt.astype(jnp.float32) * a)  # (B,H)
+    bh = jnp.repeat(bt, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    upd = jnp.einsum("bhs,bhp->bhsp", bh, xt.astype(jnp.float32) * dtt[..., None])
+    new_state = state * decay[..., None, None] + upd
+    ch = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
+    yt = jnp.einsum("bhs,bhsp->bhp", ch, new_state)
+    return new_state, yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full mixer block
+# ---------------------------------------------------------------------------
+
+
+def _project(p: Params, u: Array, name: str) -> Array:
+    return jnp.matmul(u, p[name]["w"].astype(u.dtype))
+
+
+def mamba_block(p: Params, u: Array, cfg: ModelConfig) -> tuple[Array, dict]:
+    """Full-sequence mamba2 mixer. u (B, S, d) -> (out, cache_state)."""
+    bsz, s, _ = u.shape
+    z = hint(_project(p, u, "z_proj"), "dp", None, "model")
+    x_pre = hint(_project(p, u, "x_proj"), "dp", None, "model")
+    b_pre = _project(p, u, "b_proj")
+    c_pre = _project(p, u, "c_proj")
+    dt = hint(_project(p, u, "dt_proj"), "dp", None, "model")
+    xc = causal_conv1d(x_pre, p["conv_x"], p["conv_bias_x"])
+    bcv = causal_conv1d(b_pre, p["conv_b"], p["conv_bias_b"])
+    ccv = causal_conv1d(c_pre, p["conv_c"], p["conv_bias_c"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(ACT_DTYPE)
+    bcv = jax.nn.silu(bcv.astype(jnp.float32)).astype(ACT_DTYPE)
+    ccv = jax.nn.silu(ccv.astype(jnp.float32)).astype(ACT_DTYPE)
+    x = hint(xc.reshape(bsz, s, cfg.ssm_heads, cfg.ssm_head_dim), "dp", None, "model", None)
+    b_mat = bcv.reshape(bsz, s, cfg.ssm_groups, cfg.ssm_state)
+    c_mat = ccv.reshape(bsz, s, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(x, dt, a, b_mat, c_mat)
+    y = hint(y, "dp", None, "model", None)
+    y = y + x.astype(jnp.float32).astype(y.dtype) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)  # gated
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.matmul(y, p["out_proj"]["w"].astype(y.dtype))
+    # decode-ready cache: last (K-1) PRE-conv channel values per stream
+    tail = cfg.ssm_conv - 1
+
+    def _tail(t: Array) -> Array:
+        tt = t[:, -tail:, :]
+        pad_t = tail - tt.shape[1]
+        if pad_t > 0:
+            tt = jnp.pad(tt, ((0, 0), (pad_t, 0), (0, 0)))
+        return tt.astype(ACT_DTYPE)
+
+    cache = {
+        "conv_x": _tail(x_pre),
+        "conv_b": _tail(b_pre),
+        "conv_c": _tail(c_pre),
+        "ssm": final.astype(jnp.float32),
+    }
+    return out, cache
+
+
+def mamba_step(p: Params, ut: Array, cache: dict, cfg: ModelConfig) -> tuple[Array, dict]:
+    """One-token mamba2 step. ut (B, 1, d); cache {conv_*, ssm}."""
+    bsz = ut.shape[0]
+    u = ut[:, 0, :]
+    z = jnp.matmul(u, p["z_proj"]["w"].astype(u.dtype))
+    x_pre = jnp.matmul(u, p["x_proj"]["w"].astype(u.dtype))
+    b_pre = jnp.matmul(u, p["b_proj"]["w"].astype(u.dtype))
+    c_pre = jnp.matmul(u, p["c_proj"]["w"].astype(u.dtype))
+    dt = jnp.matmul(u, p["dt_proj"]["w"].astype(u.dtype))
+    cx, xt = conv_step(cache["conv_x"], x_pre, p["conv_x"], p["conv_bias_x"])
+    cb, bt = conv_step(cache["conv_b"], b_pre, p["conv_b"], p["conv_bias_b"])
+    cc, ct = conv_step(cache["conv_c"], c_pre, p["conv_c"], p["conv_bias_c"])
+    xt = jax.nn.silu(xt.astype(jnp.float32)).astype(ACT_DTYPE)
+    bt = jax.nn.silu(bt.astype(jnp.float32)).astype(ACT_DTYPE)
+    ct = jax.nn.silu(ct.astype(jnp.float32)).astype(ACT_DTYPE)
+    x = xt.reshape(bsz, cfg.ssm_heads, cfg.ssm_head_dim)
+    b_mat = bt.reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    c_mat = ct.reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    new_ssm, y = ssd_step(cache["ssm"], x, dt, a, b_mat, c_mat)
+    y = y + x.astype(y.dtype) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(bsz, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.matmul(y, p["out_proj"]["w"].astype(y.dtype))[:, None, :]
+    return out, {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": new_ssm}

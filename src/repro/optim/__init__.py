@@ -1,0 +1,12 @@
+"""Optimizers and schedules (no external deps).
+
+  adamw.py      AdamW with decoupled weight decay, global-norm clipping,
+                and a memory-factored (Adafactor-style) second-moment
+                mode for 300B+ models (row/col statistics instead of a
+                full v tensor — the difference between fitting and not
+                fitting optimizer state on a 256-chip pod).
+  schedule.py   warmup + cosine decay.
+"""
+
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule

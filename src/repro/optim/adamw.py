@@ -1,0 +1,132 @@
+"""AdamW with optional factored second moment.
+
+Pure functions over pytrees: ``state = adamw_init(params, cfg)``,
+``params, state = adamw_update(grads, params, state, lr, cfg)``.
+Everything jit/pjit-friendly; state shards exactly like params (the
+partitioner maps m/v specs from the param specs), so ZeRO-style
+optimizer sharding falls out of the param sharding for free.
+
+Factored mode (``cfg.factored=True``): tensors with ndim >= 2 keep only
+row/col second-moment statistics (Adafactor, Shazeer & Stern 2018) —
+O(n+m) instead of O(nm) memory. First moment stays dense (momentum
+matters for quality); this halves optimizer state vs Adam and is what
+lets jamba-398b's state fit a single 256-chip pod (see EXPERIMENTS.md
+§Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    factored: bool = False
+    factored_min_size: int = 128 * 128  # only factor tensors at least this big
+    eps_factored: float = 1e-30
+    # Mixed precision: keep an fp32 master copy in the optimizer state
+    # and emit params in their own (bf16) dtype. With ZeRO-3 batch
+    # sharding this halves the per-layer weight all-gather (bf16 on the
+    # wire instead of fp32) — see EXPERIMENTS.md §Perf. Enabled
+    # automatically when any param is sub-fp32.
+    master_weights: bool | None = None
+
+
+def _factorable(x: Array, cfg: OptConfig) -> bool:
+    return cfg.factored and x.ndim >= 2 and x.size >= cfg.factored_min_size
+
+
+def _wants_master(params: Any, cfg: OptConfig) -> bool:
+    if cfg.master_weights is not None:
+        return cfg.master_weights
+    return any(l.dtype != jnp.float32 for l in jax.tree.leaves(params))
+
+
+def adamw_init(params: Any, cfg: OptConfig) -> dict:
+    def init_v(p):
+        if _factorable(p, cfg):
+            # row/col mean-square stats over the trailing two dims
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros_like(p, jnp.float32)
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "v": jax.tree.map(init_v, params, is_leaf=lambda x: isinstance(x, jax.Array)),
+    }
+    if _wants_master(params, cfg):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def _update_v(g2: Array, v, cfg: OptConfig):
+    """Second-moment EMA; returns (new_v, dense 1/sqrt(v_hat) factor fn input)."""
+    if isinstance(v, dict):  # factored
+        vr = cfg.b2 * v["vr"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+        vc = cfg.b2 * v["vc"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+        # reconstruct: v̂ ≈ vr ⊗ vc / mean(vr)
+        denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps_factored)
+        vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+        return {"vr": vr, "vc": vc}, vhat
+    vnew = cfg.b2 * v + (1 - cfg.b2) * g2
+    return vnew, vnew
+
+
+def adamw_update(
+    grads: Any, params: Any, state: dict, lr: Array | float, cfg: OptConfig
+) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    # global-norm clip (fp32)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    has_master = "master" in state
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"]) if has_master else flat_p
+
+    new_p, new_m, new_v, new_w = [], [], [], []
+    for g, p, m, v, w in zip(flat_g, flat_p, flat_m, flat_v, flat_w):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2, vhat = _update_v(g * g, v, cfg)
+        mhat = m2 / bc1
+        vhat = vhat / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            upd = upd + cfg.weight_decay * w.astype(jnp.float32)
+        w2 = w.astype(jnp.float32) - lr * upd
+        new_p.append(w2.astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+
+    new_state = {"step": step, "m": treedef.unflatten(new_m), "v": treedef.unflatten(new_v)}
+    if has_master:
+        new_state["master"] = treedef.unflatten(new_w)
+    return treedef.unflatten(new_p), new_state

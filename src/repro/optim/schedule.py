@@ -1,0 +1,19 @@
+"""LR schedules as pure functions of the step (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    step, *, peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    """Linear warmup to ``peak_lr`` then cosine decay to ``final_frac*peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    floor = final_frac * peak_lr
+    cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,3 @@
+"""Batched serving engine (continuous batching over a slot cache)."""
+
+from repro.serving.engine import Request, ServingEngine

@@ -1,0 +1,4 @@
+"""Fault-tolerant training loop (checkpoint/restart, preemption-safe,
+deterministic restart-safe data)."""
+
+from repro.train.loop import TrainLoopConfig, make_train_step, train

@@ -1,0 +1,82 @@
+"""Minimal property-based testing harness (hypothesis is not installable
+in this container — see DESIGN.md §8).
+
+Provides a ``@given(**strategies)`` decorator that runs the test body
+over ``N_TRIALS`` seeded random draws and reports the failing draw
+(seed + concrete values) on the first counterexample, so failures are
+reproducible with ``PROPTEST_SEED=<seed>``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+N_TRIALS = int(os.environ.get("PROPTEST_TRIALS", "10"))
+BASE_SEED = int(os.environ.get("PROPTEST_SEED", "20240514"))
+
+
+class Strategy:
+    def __init__(self, draw_fn, desc: str):
+        self._draw = draw_fn
+        self.desc = desc
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"Strategy({self.desc})"
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)), f"int[{lo},{hi}]")
+
+
+def sampled_from(options) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rng: options[int(rng.integers(0, len(options)))], f"in{options}")
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)), f"float[{lo},{hi}]")
+
+
+def bit_matrix(rows: Strategy, cols: Strategy) -> Strategy:
+    def draw(rng):
+        r, c = rows.draw(rng), cols.draw(rng)
+        return rng.integers(0, 2, size=(r, c)).astype(np.int32)
+
+    return Strategy(draw, "bit_matrix")
+
+
+def given(**strategies):
+    """Run the decorated test over N_TRIALS seeded draws."""
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must not see the drawn
+        # parameter names in the wrapper signature (it would treat them
+        # as fixtures).
+        def wrapper(*args, **kwargs):
+            for trial in range(N_TRIALS):
+                seed = BASE_SEED + trial
+                rng = np.random.default_rng(seed)
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise with repro info
+                    short = {
+                        k: (v.shape if isinstance(v, np.ndarray) else v)
+                        for k, v in drawn.items()
+                    }
+                    raise AssertionError(
+                        f"property failed at trial {trial} (PROPTEST_SEED={seed}): "
+                        f"draw={short}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

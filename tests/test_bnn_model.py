@@ -1,0 +1,69 @@
+"""Executable BNN models: engine equivalence (reference == tacitmap ==
+wdm) and trainability — the paper's 'mapping does not affect accuracy'."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model
+from repro.core.crossbar import CrossbarSpec
+
+
+TILE = CrossbarSpec(rows=64, cols=32)
+OTILE = CrossbarSpec(rows=64, cols=32, technology="oPCM", wdm_k=4)
+
+
+class TestMLPEngines:
+    def setup_method(self):
+        self.cfg = model.MLPConfig(dims=(20, 32, 24, 5))
+        self.params = model.init_mlp(jax.random.PRNGKey(0), self.cfg)
+        self.x = jax.random.normal(jax.random.PRNGKey(1), (6, 20))
+
+    def test_engines_bit_exact(self):
+        ref = model.mlp_forward_infer(self.params, self.x, self.cfg, "reference")
+        tac = model.mlp_forward_infer(self.params, self.x, self.cfg, "tacitmap", TILE)
+        wdm_ = model.mlp_forward_infer(self.params, self.x, self.cfg, "wdm", OTILE)
+        np.testing.assert_allclose(np.asarray(tac), np.asarray(ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(wdm_), np.asarray(ref), atol=1e-5)
+
+    def test_train_reduces_loss(self):
+        cfg, params = self.cfg, self.params
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (64, 20))
+        y = jax.random.randint(jax.random.PRNGKey(3), (64,), 0, 5)
+
+        def loss_fn(p):
+            logits = model.mlp_forward_train(p, x, cfg)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+        loss0 = loss_fn(params)
+        grad_fn = jax.jit(jax.grad(loss_fn))
+        for _ in range(30):
+            g = grad_fn(params)
+            params = jax.tree.map(lambda p, g_: p - 0.05 * g_, params, g)
+        assert loss_fn(params) < loss0
+
+
+class TestConvEngines:
+    def setup_method(self):
+        self.cfg = model.ConvConfig(in_hw=12, in_ch=1, convs=((4, 3), (8, 3)), pools=(1, 2), fcs=(16, 5))
+        self.params = model.init_conv(jax.random.PRNGKey(0), self.cfg)
+        self.x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, 1))
+
+    def test_engines_bit_exact(self):
+        ref = model.conv_forward(self.params, self.x, self.cfg, train=False, engine="reference")
+        tac = model.conv_forward(self.params, self.x, self.cfg, train=False, engine="tacitmap", spec=TILE)
+        wdm_ = model.conv_forward(self.params, self.x, self.cfg, train=False, engine="wdm", spec=OTILE)
+        np.testing.assert_allclose(np.asarray(tac), np.asarray(ref), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(wdm_), np.asarray(ref), atol=1e-4)
+
+    def test_im2col_shapes(self):
+        cols = model.im2col(self.x, 3)
+        assert cols.shape == (2, 10, 10, 9)
+
+    def test_forward_shapes_no_nan(self):
+        out = model.conv_forward(self.params, self.x, self.cfg, train=True)
+        assert out.shape == (2, 5)
+        assert not bool(jnp.isnan(out).any())

@@ -1,0 +1,155 @@
+"""Cost model invariants + the paper's headline claims (Fig. 7 / Fig. 8).
+
+The exact constants are calibrated (DESIGN.md §3), so the claims are
+asserted as *bands* around the paper's reported numbers; structural laws
+(TacitMap ≤ n× baseline, WDM ≤ K×, monotonicity) are asserted exactly.
+"""
+
+import dataclasses
+import statistics
+
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import einsteinbarrier as eb
+from repro.core.networks import NETWORKS, LayerDesc
+
+
+def all_ratios():
+    out = {}
+    for name, net in NETWORKS.items():
+        r = cm.evaluate_all(net)
+        b_lat = r["Baseline-ePCM"]["latency_s"]
+        b_en = r["Baseline-ePCM"]["energy_j"]
+        out[name] = {
+            "tm": b_lat / r["TacitMap-ePCM"]["latency_s"],
+            "eb": b_lat / r["EinsteinBarrier"]["latency_s"],
+            "gpu": b_lat / r["Baseline-GPU"]["latency_s"],
+            "e_tm": r["TacitMap-ePCM"]["energy_j"] / b_en,
+            "e_eb": r["EinsteinBarrier"]["energy_j"] / b_en,
+        }
+    return out
+
+
+RATIOS = all_ratios()
+
+
+class TestPaperLatencyClaims:
+    def test_tacitmap_improves_all_networks(self):
+        # Fig. 7 obs. 1: both designs improve latency for every network
+        for name, r in RATIOS.items():
+            assert r["tm"] > 1, name
+            assert r["eb"] > 1, name
+
+    def test_tacitmap_average_band(self):
+        # paper: ~78x average
+        avg = statistics.mean(r["tm"] for r in RATIOS.values())
+        assert 50 <= avg <= 110, avg
+
+    def test_tacitmap_max_band(self):
+        # paper: up to ~154x
+        mx = max(r["tm"] for r in RATIOS.values())
+        assert 100 <= mx <= 200, mx
+
+    def test_einsteinbarrier_average_band(self):
+        # paper: ~1205x average
+        avg = statistics.mean(r["eb"] for r in RATIOS.values())
+        assert 800 <= avg <= 1900, avg
+
+    def test_einsteinbarrier_max_band(self):
+        # paper: up to ~3113x
+        mx = max(r["eb"] for r in RATIOS.values())
+        assert 2000 <= mx <= 3600, mx
+
+    def test_eb_over_tm_band(self):
+        # paper: ~15x average, bounded by K * (t_e / t_o) = 20
+        for name, r in RATIOS.items():
+            ratio = r["eb"] / r["tm"]
+            k_bound = cm.EINSTEINBARRIER.k * (
+                cm.TACITMAP_EPCM.tile.t_vmm_ns / cm.EINSTEINBARRIER.tile.t_vmm_ns
+            )
+            assert ratio <= k_bound + 1e-9, name
+            assert ratio >= 10, name
+
+    def test_network_dependence(self):
+        # Fig. 7 obs. 2: improvement varies network to network
+        tms = [r["tm"] for r in RATIOS.values()]
+        assert max(tms) / min(tms) > 5
+
+    def test_gpu_not_always_worse_than_cim(self):
+        # Fig. 7 obs. 4: baseline beats GPU on the small CNN, loses on MLP-L
+        assert RATIOS["CNN-S"]["gpu"] < 1 / 2.5   # base >=2.5x faster than GPU
+        assert RATIOS["MLP-L"]["gpu"] > 2         # GPU faster on MLP-L
+
+
+class TestPaperEnergyClaims:
+    def test_tacitmap_energy_worse_than_baseline(self):
+        # Fig. 8 obs. 1: ~5.35x average increase (ADCs vs SAs)
+        avg = statistics.mean(r["e_tm"] for r in RATIOS.values())
+        assert 3.5 <= avg <= 7.5, avg
+        assert all(r["e_tm"] > 1 for r in RATIOS.values())
+
+    def test_einsteinbarrier_energy_better_than_baseline(self):
+        # Fig. 8 obs. 2: ~1.56x average improvement => ratio ~0.64
+        avg = statistics.mean(r["e_eb"] for r in RATIOS.values())
+        assert 0.45 <= avg <= 0.85, avg
+
+    def test_eb_within_60pct_envelope(self):
+        # abstract: "maintaining the energy consumption within 60% of
+        # the CIM baseline" — EB average stays within [0.4, 1.6]x
+        avg = statistics.mean(r["e_eb"] for r in RATIOS.values())
+        assert avg <= 1.6
+
+
+class TestStructuralLaws:
+    def test_tacitmap_layer_law(self):
+        # per binary layer: baseline steps = n * tacitmap steps (Fig. 3)
+        layer = LayerDesc("fc", m=512, n=777, positions=1, binary=True)
+        sb = cm.layer_steps(cm.BASELINE_EPCM, layer)
+        st_ = cm.layer_steps(cm.TACITMAP_EPCM, layer)
+        assert sb == layer.n * st_
+
+    def test_wdm_bound(self):
+        # EB steps >= TM steps / K for every layer
+        for net in NETWORKS.values():
+            for layer in net.layers:
+                st_ = cm.layer_steps(cm.TACITMAP_EPCM, layer)
+                se = cm.layer_steps(cm.EINSTEINBARRIER, layer)
+                assert se >= st_ / cm.EINSTEINBARRIER.k - 1e-9
+
+    def test_latency_monotone_in_k(self):
+        net = NETWORKS["CNN-M"]
+        lats = []
+        for k in (1, 2, 4, 8, 16):
+            tile = dataclasses.replace(cm.OPCM_TILE, wdm_k=k)
+            p = dataclasses.replace(cm.EINSTEINBARRIER, tile=tile)
+            lats.append(cm.network_latency_s(p, net))
+        assert all(a >= b for a, b in zip(lats, lats[1:]))
+
+    def test_transmitter_power_eq3(self):
+        # Eq. 3 literal evaluation
+        p = cm.EINSTEINBARRIER
+        k, m = p.k, p.tile.rows
+        expected = p.p_laser_mw + 3 * k * m + (3 * k * m + 1) / k * 45
+        assert cm.transmitter_power_mw(p) == pytest.approx(expected)
+
+    def test_tia_power_eq2(self):
+        assert cm.tia_power_mw(cm.EINSTEINBARRIER, 256) == pytest.approx(512.0)
+
+
+class TestPlacement:
+    def test_placement_capacity_and_utilization(self):
+        for net in NETWORKS.values():
+            pl = eb.place(net)
+            assert pl.total_vcores > 0
+            assert 0 < pl.utilization <= 1
+            assert pl.nodes_needed >= 1
+
+    def test_schedule_matches_costmodel(self):
+        net = NETWORKS["MLP-S"]
+        pl = eb.place(net)
+        sched = eb.schedule_summary(pl, cm.EINSTEINBARRIER)
+        total = sum(s["latency_ns"] for s in sched)
+        assert total == pytest.approx(
+            cm.network_latency_s(cm.EINSTEINBARRIER, net) * 1e9 * cm.EINSTEINBARRIER.batch
+        )

@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the kernels target TPU; interpret=True executes the kernel body on
+CPU — per the brief)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+import proptest as pt
+
+
+def _signs(rng, shape):
+    return jnp.asarray(rng.choice(np.array([-1.0, 1.0], np.float32), size=shape))
+
+
+class TestPackBits:
+    def test_roundtrip_values(self):
+        bits = jnp.asarray([1] + [0] * 31 + [1, 1] + [0] * 30, jnp.int32).reshape(1, 64)
+        packed = ops.pack_bits(bits)
+        assert packed.shape == (1, 2)
+        assert int(packed[0, 0]) == 1 and int(packed[0, 1]) == 3
+
+    @pt.given(m=pt.integers(1, 200), b=pt.integers(1, 5))
+    def test_popcount_preserved(self, m, b):
+        rng = np.random.default_rng(m * 3 + b)
+        bits = jnp.asarray(rng.integers(0, 2, (b, m)), jnp.int32)
+        packed = ops.pack_bits(bits)
+        pc = jax.lax.population_count(packed).sum(-1)
+        np.testing.assert_array_equal(np.asarray(pc), np.asarray(bits.sum(-1)))
+
+    def test_msb_word(self):
+        # bit 31 set -> int32 sign bit; popcount must still see it
+        bits = jnp.zeros((1, 32), jnp.int32).at[0, 31].set(1)
+        packed = ops.pack_bits(bits)
+        assert int(jax.lax.population_count(packed)[0, 0]) == 1
+
+
+class TestXnorMatmul:
+    @pytest.mark.parametrize(
+        "b,m,n",
+        [
+            (1, 32, 1),        # minimal
+            (4, 100, 30),      # ragged everything
+            (128, 512, 128),   # exactly one block
+            (130, 513, 129),   # one past block boundaries
+            (16, 4096, 64),    # deep contraction
+        ],
+    )
+    def test_vs_reference(self, b, m, n):
+        rng = np.random.default_rng(b * 7 + m + n)
+        a, w = _signs(rng, (b, m)), _signs(rng, (m, n))
+        got = ops.xnor_matmul(a, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.xnor_matmul_ref(a, w)))
+
+    @pt.given(b=pt.integers(1, 40), m=pt.integers(1, 300), n=pt.integers(1, 50))
+    def test_property_sweep(self, b, m, n):
+        rng = np.random.default_rng(b + m * 11 + n)
+        a, w = _signs(rng, (b, m)), _signs(rng, (m, n))
+        got = ops.xnor_matmul(a, w, bm=8, bn=8, bkw=2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.xnor_matmul_ref(a, w)))
+
+    def test_batch_leading_dims(self):
+        rng = np.random.default_rng(0)
+        a, w = _signs(rng, (2, 3, 64)), _signs(rng, (64, 16))
+        got = ops.xnor_matmul(a, w)
+        assert got.shape == (2, 3, 16)
+        np.testing.assert_array_equal(
+            np.asarray(got.reshape(6, 16)),
+            np.asarray(ref.xnor_matmul_ref(a.reshape(6, 64), w)),
+        )
+
+    def test_int_dtype_input(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.choice([-1, 1], (4, 96)), jnp.int32)
+        w = jnp.asarray(rng.choice([-1, 1], (96, 8)), jnp.int32)
+        got = ops.xnor_matmul(a, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(a.astype(jnp.float32) @ w.astype(jnp.float32)).astype(np.int32))
+
+
+class TestWdmMmm:
+    @pytest.mark.parametrize("g,k,m,n", [(1, 16, 256, 64), (3, 16, 100, 30), (2, 4, 512, 128)])
+    def test_vs_reference(self, g, k, m, n):
+        rng = np.random.default_rng(g + k + m + n)
+        groups, w = _signs(rng, (g, k, m)), _signs(rng, (m, n))
+        got = ops.wdm_mmm(groups, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.wdm_mmm_ref(groups, w)), rtol=0, atol=0)
+
+    @pt.given(g=pt.integers(1, 5), k=pt.sampled_from([1, 4, 16]), m=pt.integers(1, 200), n=pt.integers(1, 40))
+    def test_property_sweep(self, g, k, m, n):
+        rng = np.random.default_rng(g * 5 + k + m + n)
+        groups, w = _signs(rng, (g, k, m)), _signs(rng, (m, n))
+        got = ops.wdm_mmm(groups, w, bb=8, bn=8, bm=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.wdm_mmm_ref(groups, w)), atol=0)
+
+    def test_matches_functional_wdm_path(self):
+        # kernel result == core.wdm functional simulator result (±1 domain)
+        from repro.core import bnn, tacitmap, wdm
+        from repro.core.crossbar import CrossbarSpec
+
+        rng = np.random.default_rng(9)
+        a, w = _signs(rng, (8, 64)), _signs(rng, (64, 16))
+        spec = CrossbarSpec(rows=32, cols=16, technology="oPCM", wdm_k=4)
+        mapped = tacitmap.map_weights(bnn.signs_to_bits(w).astype(jnp.int32), spec)
+        pc = wdm.wdm_apply(mapped, bnn.signs_to_bits(a), 4)
+        sim = 2 * pc - 64
+        kern = ops.wdm_mmm(a.reshape(2, 4, 64), w).reshape(8, 16)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(sim), atol=0)
+
+
+class TestBitLinear:
+    @pytest.mark.parametrize("b,m,n", [(1, 32, 8), (8, 100, 24), (128, 512, 128), (9, 513, 3)])
+    def test_vs_reference(self, b, m, n):
+        rng = np.random.default_rng(b * 3 + m + n)
+        x = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        w = _signs(rng, (m, n))
+        alpha = jnp.asarray(rng.uniform(0.5, 2.0, (n,)), jnp.float32)
+        got = ops.bitlinear(x, w, alpha)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.bitlinear_ref(x, w, alpha)), rtol=1e-6)
+
+    def test_leading_dims(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(2, 5, 64)), jnp.float32)
+        w = _signs(rng, (64, 16))
+        alpha = jnp.ones((16,), jnp.float32)
+        got = ops.bitlinear(x, w, alpha)
+        assert got.shape == (2, 5, 16)
+
+    def test_zero_binarizes_to_plus_one(self):
+        x = jnp.zeros((4, 32), jnp.float32)
+        w = jnp.ones((32, 4), jnp.float32)
+        alpha = jnp.ones((4,), jnp.float32)
+        got = ops.bitlinear(x, w, alpha)
+        np.testing.assert_array_equal(np.asarray(got), np.full((4, 4), 32.0, np.float32))

@@ -1,0 +1,45 @@
+"""Multi-level PCM device model (paper §VI-C future work)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.multilevel import (
+    dequantize,
+    level_error_rate,
+    multilevel_vmm_exact,
+    noisy_vmm,
+    quantize_weights,
+)
+
+
+def test_quantize_roundtrip_binary():
+    w = jnp.array([-1.0, -0.3, 0.4, 1.0])  # (0.0 is a round-half-even edge)
+    q = quantize_weights(w, 1)
+    assert q.tolist() == [0, 0, 1, 1]  # binary sign mapping
+    back = dequantize(q, 1)
+    assert set(np.asarray(back).tolist()) <= {-1.0, 1.0}
+
+
+def test_quantize_monotone_levels():
+    w = jnp.linspace(-1, 1, 17)
+    for bits in (1, 2, 4):
+        q = np.asarray(quantize_weights(w, bits))
+        assert (np.diff(q) >= 0).all()
+        assert q.min() == 0 and q.max() == 2**bits - 1
+
+
+def test_noise_free_binary_is_exact():
+    import jax
+
+    a = jax.random.randint(jax.random.key(0), (8, 32), 0, 2)
+    w = jax.random.randint(jax.random.key(1), (32, 16), 0, 2)
+    exact = multilevel_vmm_exact(a, w)
+    noisy = noisy_vmm(a, w, 1, 0.0, jax.random.key(2))
+    np.testing.assert_array_equal(np.asarray(noisy), np.asarray(exact))
+
+
+def test_error_monotone_in_noise_and_depth():
+    e_b = [level_error_rate(1, s) for s in (0.0, 0.05, 0.1)]
+    assert e_b[0] == 0.0 and e_b[0] <= e_b[1] <= e_b[2]
+    at_05 = [level_error_rate(b, 0.05) for b in (1, 2, 4)]
+    assert at_05[0] <= at_05[1] <= at_05[2]

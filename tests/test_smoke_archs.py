@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch instantiates a REDUCED same-family config and runs
+one forward/train step on CPU, asserting output shapes and finiteness;
+representative families also check prefill->decode consistency against
+the full forward pass (the serving path must agree with training).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import lm_batch
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models.config import SHAPES, shape_applicable
+
+B, S = 2, 32
+
+
+def _init(cfg, seed=0):
+    init = encdec_lib.init_params if cfg.is_encdec else lm_lib.init_params
+    return init(jax.random.key(seed), cfg)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = _init(cfg)
+    batch = lm_batch(cfg, B, S, seed=1)
+    loss_fn = encdec_lib.loss_fn if cfg.is_encdec else lm_lib.loss_fn
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: loss_fn(p, batch, cfg)))(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    # a reasonable loss for random init: around ln(vocab)
+    assert 0.0 < float(loss) < 3 * jnp.log(cfg.vocab_size)
+    leaves = jax.tree.leaves(grads)
+    assert all(jnp.all(jnp.isfinite(l)) for l in leaves), f"{arch}: non-finite grads"
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = _init(cfg)
+    batch = lm_batch(cfg, B, S, seed=2)
+    if cfg.is_encdec:
+        enc = encdec_lib.encode(params, batch["src_embeds"], cfg)
+        assert enc.shape == (B, cfg.frontend_len, cfg.d_model)
+        hid = encdec_lib.decoder(params, enc, batch["tokens"], cfg)
+        assert hid.shape == (B, S, cfg.d_model)
+        assert jnp.all(jnp.isfinite(hid.astype(jnp.float32)))
+    else:
+        embeds = lm_lib.embed_tokens(params, batch["tokens"])
+        if "extra_embeds" in batch:
+            embeds = jnp.concatenate(
+                [batch["extra_embeds"].astype(embeds.dtype), embeds], axis=1
+            )
+        hid, aux = lm_lib.backbone(params, embeds, jnp.arange(embeds.shape[1]), cfg)
+        assert hid.shape == (B, embeds.shape[1], cfg.d_model)
+        assert jnp.all(jnp.isfinite(hid.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["tinyllama-1.1b", "mamba2-2.7b", "jamba-1.5-large-398b", "qwen3-moe-235b-a22b"],
+)
+def test_prefill_decode_matches_forward(arch):
+    """prefill(t[:n]) + decode steps == full forward logits (teacher forcing).
+
+    MoE capacity is raised so no tokens drop: the full forward drops
+    over-capacity tokens while a single decode token never does — a
+    policy difference, not a math bug (drops are covered in test_moe).
+    """
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke_config(arch), moe_capacity_factor=16.0)
+    params = _init(cfg)
+    tokens = lm_batch(cfg, B, S, seed=3)["tokens"]
+    n = S - 2
+
+    logits_p, pre = lm_lib.prefill(params, tokens[:, :n], cfg)
+    caches = lm_lib.init_cache(cfg, B, S)
+
+    def graft(dst, src):
+        if dst.ndim == 5 and dst.shape[2] >= src.shape[2]:
+            return dst.at[:, :, : src.shape[2]].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype)
+
+    caches = jax.tree.map(graft, caches, pre)
+    logits_d1, caches = lm_lib.decode_step(params, tokens[:, n], jnp.asarray(n), caches, cfg)
+    logits_d2, _ = lm_lib.decode_step(params, tokens[:, n + 1], jnp.asarray(n + 1), caches, cfg)
+
+    # reference: full-sequence prefill gives the last-position logits.
+    # tolerance: bf16 accumulation-order differences between the chunked
+    # SSD/flash paths and the stepwise decode path, PLUS top-k routing
+    # flips near gate ties on MoE archs (inherent to MoE serving),
+    # reach ~5e-2 on the deepest hybrid stack (jamba: mamba+attn+moe).
+    tol = 8e-2 if cfg.moe_experts else 2e-2
+    ref_last, _ = lm_lib.prefill(params, tokens, cfg)
+    assert jnp.allclose(logits_d2, ref_last, atol=tol, rtol=tol), (
+        f"{arch}: decode path diverges from full forward "
+        f"(max diff {float(jnp.abs(logits_d2 - ref_last).max()):.4f})"
+    )
+    # token-level agreement must hold regardless
+    assert jnp.mean((jnp.argmax(logits_d2, -1) == jnp.argmax(ref_last, -1))) >= 0.5
+
+
+def test_encdec_decode_matches_prefill():
+    cfg = get_smoke_config("seamless-m4t-large-v2")
+    params = _init(cfg)
+    batch = lm_batch(cfg, B, S, seed=4)
+    tokens, src = batch["tokens"], batch["src_embeds"]
+    n = S - 1
+    _, pre = encdec_lib.prefill(params, src, tokens[:, :n], cfg)
+    caches = encdec_lib.init_cache(cfg, B, S, cfg.frontend_len)
+    caches = dict(
+        caches,
+        cross_k=pre["cross_k"],
+        cross_v=pre["cross_v"],
+        self_k=caches["self_k"].at[:, :, :n].set(pre["self_k"]),
+        self_v=caches["self_v"].at[:, :, :n].set(pre["self_v"]),
+    )
+    logits_d, _ = encdec_lib.decode_step(params, tokens[:, n], jnp.asarray(n), caches, cfg)
+    ref, _ = encdec_lib.prefill(params, src, tokens, cfg)
+    # bf16 probability path in the chunked attention (prefill) vs fp32
+    # decode attention: accumulation-order gap ~3e-2 through 2 stacks
+    assert jnp.allclose(logits_d, ref, atol=5e-2, rtol=5e-2), (
+        f"max diff {float(jnp.abs(logits_d - ref).max()):.4f}"
+    )
+
+
+def test_all_40_cells_well_defined():
+    """Every (arch x shape) cell resolves to run-or-documented-skip."""
+    from repro.configs import all_cells
+
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [(a, s.name) for a, s, runs, _ in cells if not runs]
+    # exactly the 8 pure full-attention archs skip long_500k
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    sub_quadratic = {"jamba-1.5-large-398b", "mamba2-2.7b"}
+    assert sub_quadratic.isdisjoint({a for a, _ in skips})
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_numbers(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expected

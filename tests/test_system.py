@@ -1,0 +1,112 @@
+"""End-to-end behaviour tests: the paper's full pipeline and the
+framework's drivers, exercised through the public entry points."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import model as bnn_model
+from repro.core.crossbar import EPCM_TILE, OPCM_TILE
+from repro.core.networks import NETWORKS
+from repro.data import bnn_image_batch
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+ROOT = Path(__file__).parent.parent
+
+
+def _train_mlp(steps=150, dims=(64, 48, 32, 10), hw=8):
+    cfg = bnn_model.MLPConfig(dims=dims)
+    params = bnn_model.init_mlp(jax.random.key(0), cfg)
+    opt_cfg = OptConfig(weight_decay=0.0)
+    opt = adamw_init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = bnn_model.mlp_forward_train(p, x, cfg)
+            return -jnp.mean(
+                jnp.sum(jax.nn.one_hot(y, 10) * jax.nn.log_softmax(logits), axis=-1)
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(grads, params, opt, 1e-3, opt_cfg)
+        return params, opt, loss
+
+    for i in range(steps):
+        x, y = bnn_image_batch(64, shape=(hw, hw, 1), step=i)
+        params, opt, loss = step(params, opt, x.reshape(64, -1), y)
+    return cfg, params
+
+
+class TestPaperPipeline:
+    """Train BNN -> deploy through every engine -> accelerator model."""
+
+    def test_bnn_trains_and_engines_agree(self):
+        cfg, params = _train_mlp()
+        x, y = bnn_image_batch(256, shape=(8, 8, 1), step=9999)
+        x = x.reshape(256, -1)
+        logits = {}
+        for engine, spec in (
+            ("reference", EPCM_TILE),
+            ("tacitmap", EPCM_TILE),
+            ("wdm", OPCM_TILE),
+        ):
+            logits[engine] = bnn_model.mlp_forward_infer(params, x, cfg, engine, spec)
+        # the mappings are exact: identical logits, identical accuracy
+        assert jnp.allclose(logits["reference"], logits["tacitmap"], atol=1e-4)
+        assert jnp.allclose(logits["reference"], logits["wdm"], atol=1e-4)
+        acc = float(jnp.mean(jnp.argmax(logits["tacitmap"], -1) == y))
+        assert acc > 0.9, f"BNN failed to learn (acc {acc})"
+
+    def test_cost_model_covers_all_networks(self):
+        for name, net in NETWORKS.items():
+            r = cm.evaluate_all(net)
+            assert set(r) == {
+                "Baseline-ePCM", "TacitMap-ePCM", "EinsteinBarrier", "Baseline-GPU"
+            }
+            for v in r.values():
+                assert v["latency_s"] > 0 and v["energy_j"] > 0
+
+
+class TestDrivers:
+    """The CLI drivers run end to end (subprocess: clean jax state)."""
+
+    def _run(self, args, timeout=420):
+        out = subprocess.run(
+            [sys.executable, "-m", *args],
+            capture_output=True,
+            text=True,
+            cwd=ROOT,
+            env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+            timeout=timeout,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        return out.stdout
+
+    def test_train_driver_smoke(self, tmp_path):
+        out = self._run([
+            "repro.launch.train", "--arch", "tinyllama-1.1b", "--smoke",
+            "--steps", "6", "--batch", "2", "--seq", "32",
+            "--ckpt", str(tmp_path / "ck"), "--ckpt-every", "3",
+        ])
+        assert "final_step=5" in out
+
+    def test_serve_driver_smoke(self):
+        out = self._run([
+            "repro.launch.serve", "--arch", "qwen1.5-0.5b", "--smoke",
+            "--batch", "2", "--prompt-len", "8", "--gen", "4",
+        ])
+        assert "tok/s" in out
+
+    def test_train_driver_bnn_quant(self, tmp_path):
+        out = self._run([
+            "repro.launch.train", "--arch", "llama3.2-3b", "--smoke",
+            "--quant", "bnn", "--steps", "4", "--batch", "2", "--seq", "16",
+            "--ckpt", str(tmp_path / "ck2"),
+        ])
+        assert "quant=bnn" in out

@@ -1,0 +1,117 @@
+"""Fault-tolerance invariants of the training loop (DESIGN.md §6)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, make_train_step, train
+from repro.train.loop import _Preemption
+
+
+def _loop(tmp_path, **kw) -> TrainLoopConfig:
+    base = dict(
+        total_steps=8,
+        batch_size=2,
+        seq_len=16,
+        checkpoint_every=3,
+        checkpoint_dir=str(tmp_path),
+        async_checkpoint=False,
+        warmup_steps=2,
+    )
+    base.update(kw)
+    return TrainLoopConfig(**base)
+
+
+CFG = get_smoke_config("tinyllama-1.1b")
+
+
+def test_loss_decreases(tmp_path):
+    out = train(CFG, _loop(tmp_path, total_steps=30, peak_lr=1e-3))
+    first = sum(out["losses"][:5]) / 5
+    last = sum(out["losses"][-5:]) / 5
+    assert last < first, out["losses"]
+
+
+def test_restart_reproduces_exact_trajectory(tmp_path):
+    """Kill at step 5, restart -> bit-identical final params vs uninterrupted."""
+    ref = train(CFG, _loop(tmp_path / "ref"))
+
+    calls = {"n": 0}
+
+    def fault(step):
+        calls["n"] += 1
+        if step == 5 and calls["n"] <= 6:  # fail exactly once
+            raise RuntimeError("injected node failure")
+
+    out = train(CFG, _loop(tmp_path / "faulty"), fault_hook=fault)
+    assert out["restarts"] == 1
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        ref["params"],
+        out["params"],
+    )
+
+
+def test_too_many_faults_raises(tmp_path):
+    def always_fail(step):
+        raise RuntimeError("flaky node")
+
+    try:
+        train(CFG, _loop(tmp_path, max_restarts=1), fault_hook=always_fail)
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    loop = _loop(tmp_path, total_steps=50)
+
+    # simulate SIGTERM at step 4 via the fault hook (same thread)
+    state = {}
+
+    def hook(step):
+        if step == 4:
+            # directly set the flag the signal handler would set
+            import repro.train.loop as L
+
+            state["p"] = True
+            # find the active _Preemption via the loop's local — instead,
+            # send the signal for real:
+            import os
+            import signal
+
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    out = train(CFG, loop, fault_hook=hook)
+    assert out["preempted"] is True
+    assert out["final_step"] == 4
+    # resuming completes the run from the preemption checkpoint
+    out2 = train(CFG, loop)
+    assert out2["final_step"] == 49
+    assert out2["preempted"] is False
+
+
+def test_nan_guard_skips_update():
+    opt_cfg = OptConfig()
+    loop = TrainLoopConfig(total_steps=4, batch_size=2, seq_len=8)
+    step_fn = make_train_step(CFG, opt_cfg, loop)
+    from repro.data import lm_batch
+    from repro.models import lm as lm_lib
+    from repro.optim import adamw_init
+
+    params = lm_lib.init_params(jax.random.key(0), CFG)
+    # poison one weight with NaN -> loss is NaN -> update must be skipped
+    poisoned = jax.tree.map(lambda x: x, params)
+    poisoned["embed"] = poisoned["embed"].at[0, 0].set(jnp.nan)
+    opt = adamw_init(poisoned, opt_cfg)
+    batch = lm_batch(CFG, 2, 8)
+    new_params, _, metrics = step_fn(poisoned, opt, batch, jnp.asarray(0))
+    assert int(metrics["skipped"]) == 1
+    np.testing.assert_array_equal(
+        np.asarray(new_params["final_norm"]), np.asarray(poisoned["final_norm"])
+    )

@@ -1,0 +1,52 @@
+"""Vocab padding: tables pad to /256, semantics unchanged."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import lm_batch
+from repro.models import lm as lm_lib
+from repro.models.config import LayerKind, ModelConfig
+
+
+def _odd_vocab_cfg():
+    base = get_smoke_config("tinyllama-1.1b")
+    return dataclasses.replace(base, vocab_size=251)  # prime, pads to 256
+
+
+def test_padded_vocab_values():
+    cfg = _odd_vocab_cfg()
+    assert cfg.padded_vocab == 256
+    even = get_smoke_config("tinyllama-1.1b")  # 256 already
+    assert even.padded_vocab == even.vocab_size
+
+
+def test_tables_padded_and_logits_masked():
+    cfg = _odd_vocab_cfg()
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    assert params["embed"].shape == (256, cfg.d_model)
+    tokens = lm_batch(cfg, 2, 16, seed=0)["tokens"]
+    assert int(tokens.max()) < cfg.vocab_size
+    logits, _ = lm_lib.prefill(params, tokens, cfg)
+    assert logits.shape[-1] == 256
+    # padded columns can never win an argmax
+    assert jnp.all(logits[:, cfg.vocab_size:] <= -1e29)
+    assert int(jnp.argmax(logits, -1).max()) < cfg.vocab_size
+
+
+def test_loss_ignores_padding_columns():
+    """The loss over a padded table equals the loss where padding rows
+    are forced to -inf by construction: finite, and invariant to the
+    padding weights' values."""
+    cfg = _odd_vocab_cfg()
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    batch = lm_batch(cfg, 2, 16, seed=1)
+    l1 = lm_lib.loss_fn(params, batch, cfg)
+    # perturb ONLY the padding columns of the head/embed
+    p2 = dict(params)
+    p2["head"] = params["head"].at[:, cfg.vocab_size:].add(37.0)
+    l2 = lm_lib.loss_fn(p2, batch, cfg)
+    assert jnp.isfinite(l1)
+    assert jnp.allclose(l1, l2), "padding columns leaked into the loss"
