@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as engine_lib
 from repro.kernels import ops, ref
 
 
@@ -61,6 +62,34 @@ def run(m=512, k=1024, n=512, seed=0) -> dict:
     }
 
 
+def engine_rows(b=64, m=512, n=128, seed=0) -> list[dict]:
+    """One comparable row per registered execution backend.
+
+    Every backend runs the SAME ±1 matmul; rows report bit-exactness vs
+    ``reference``, modeled sequential hardware steps (``Engine.steps_for``
+    — the cost-model contract) and directional CPU wall time.
+    """
+    key = jax.random.key(seed)
+    ka, kw = jax.random.split(key)
+    a = jnp.sign(jax.random.normal(ka, (b, m))).astype(jnp.float32)
+    w = jnp.sign(jax.random.normal(kw, (m, n))).astype(jnp.float32)
+    out_ref = np.asarray(ref.xnor_matmul_ref(a, w))
+
+    rows = []
+    for name in engine_lib.list_engines():
+        eng = engine_lib.get_engine(name)
+        f = jax.jit(eng.binary_vmm)
+        out = np.asarray(f(a, w)).astype(np.int64)
+        rows.append({
+            "engine": name,
+            "hardware": eng.info.hardware,
+            "bitexact": bool(np.array_equal(out, out_ref.astype(np.int64))),
+            "steps": eng.steps_for(m, n, b),
+            "cpu_t_s": _time(f, a, w),
+        })
+    return rows
+
+
 def main() -> int:
     out = run()
     m, k, n = out["shape"]
@@ -71,7 +100,15 @@ def main() -> int:
     print(f"HBM traffic: bf16 {out['hbm_bytes_bf16']/2**20:.1f} MiB -> "
           f"packed {out['hbm_bytes_packed']/2**20:.1f} MiB "
           f"({out['traffic_reduction']:.0f}x reduction — the paper's 1-bit/cell density)")
-    return 0 if out["bitexact"] else 1
+
+    rows = engine_rows()
+    print("\n== engine sweep: registered backends, one ±1 matmul (64x512x128) ==")
+    print(f"{'engine':>14s} {'bit-exact':>9s} {'hw steps':>9s} {'cpu_ms':>8s}  hardware")
+    for r in rows:
+        print(f"{r['engine']:>14s} {str(r['bitexact']):>9s} {r['steps']:>9d} "
+              f"{r['cpu_t_s']*1e3:8.1f}  {r['hardware']}")
+    ok = out["bitexact"] and all(r["bitexact"] for r in rows)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -2,11 +2,13 @@
 framework-level reports.
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --sections kernel_bench,wdm_sweep
 
 Sections:
   1. paper_latency  — Fig. 7 (latency, 4 designs x 6 BNNs) + band checks
   2. paper_energy   — Fig. 8 (energy) + band checks
-  3. kernel_bench   — packed XNOR matmul (TPU TacitMap) traffic/exactness
+  3. kernel_bench   — packed XNOR matmul traffic/exactness + a uniform
+                      sweep over every backend in the engine registry
   4. wdm_sweep      — WDM capacity K sweep (Eq. 2/3 overheads vs
                       step-count win — the paper's §IV-B trade-off)
   5. multilevel     — multi-level PCM cells vs noise (§VI-C future work)
@@ -15,6 +17,18 @@ Sections:
 """
 
 from __future__ import annotations
+
+import argparse
+
+SECTIONS = (
+    "paper_latency",
+    "paper_energy",
+    "kernel_bench",
+    "wdm_sweep",
+    "multilevel",
+    "dse",
+    "roofline",
+)
 
 
 def wdm_sweep() -> int:
@@ -38,22 +52,47 @@ def wdm_sweep() -> int:
     return 0
 
 
-def main() -> int:
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run the paper-reproduction benchmark sections "
+        "(latency/energy bands, kernel + engine-registry sweeps, DSE).",
+    )
+    ap.add_argument(
+        "--sections",
+        default="all",
+        help="comma-separated subset of: " + ", ".join(SECTIONS) + " (default: all)",
+    )
+    args = ap.parse_args(argv)
+    wanted = set(SECTIONS) if args.sections == "all" else {
+        s.strip() for s in args.sections.split(",") if s.strip()
+    }
+    unknown = wanted - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown sections: {', '.join(sorted(unknown))}")
+
     import glob
 
     from benchmarks import dse, kernel_bench, multilevel, paper_energy, paper_latency, roofline
 
     rc = 0
-    rc |= paper_latency.main()
-    rc |= paper_energy.main()
-    rc |= kernel_bench.main()
-    rc |= wdm_sweep()
-    rc |= multilevel.main()
-    rc |= dse.main()
-    if glob.glob("runs/dryrun/*.json"):
-        rc |= roofline.main()
-    else:
-        print("\n[roofline] skipped — no runs/dryrun/*.json (run repro.launch.dryrun)")
+    if "paper_latency" in wanted:
+        rc |= paper_latency.main()
+    if "paper_energy" in wanted:
+        rc |= paper_energy.main()
+    if "kernel_bench" in wanted:
+        rc |= kernel_bench.main()
+    if "wdm_sweep" in wanted:
+        rc |= wdm_sweep()
+    if "multilevel" in wanted:
+        rc |= multilevel.main()
+    if "dse" in wanted:
+        rc |= dse.main()
+    if "roofline" in wanted:
+        if glob.glob("runs/dryrun/*.json"):
+            rc |= roofline.main()
+        else:
+            print("\n[roofline] skipped — no runs/dryrun/*.json (run repro.launch.dryrun)")
     return rc
 
 

@@ -1,7 +1,32 @@
 import sys
 from pathlib import Path
 
+import pytest
+
 # make `src/repro` importable and tests/proptest.py reachable from test files
 ROOT = Path(__file__).parent
 sys.path.insert(0, str(ROOT / "src"))
 sys.path.insert(0, str(ROOT / "tests"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu: compiled Pallas path — needs a real TPU backend. The default "
+        "CPU run executes all kernels in interpret mode instead, so the "
+        "plain `pytest` gate is meaningful on any machine.",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(
+        reason="requires a TPU backend; CPU runs cover the same kernels in "
+        "Pallas interpret mode"
+    )
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

@@ -56,13 +56,17 @@ def main() -> int:
             print(f"step {i:4d} loss {float(loss):.4f}")
     print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
 
-    # -- eval through every execution engine --------------------------------
+    # -- eval through every registered execution engine ---------------------
+    from repro.core import engine as engine_lib
+
     x, y = bnn_image_batch(512, shape=(28, 28, 1), step=10_000)
     x = x.reshape(512, -1)
-    for engine in ("reference", "tacitmap", "wdm"):
+    for engine in engine_lib.list_engines():
+        if engine == "custbinarymap":
+            continue  # row-serial sim materializes (B, n, m) — demo stays lean
         logits = bnn_model.mlp_forward_infer(params, x, cfg, engine=engine)
         acc = float(jnp.mean((jnp.argmax(logits, -1) == y)))
-        print(f"engine={engine:9s} accuracy {acc:.3f}")
+        print(f"engine={engine:13s} accuracy {acc:.3f}")
 
     # -- what the accelerator buys you (the paper's Fig. 7/8 for this net) --
     r = cm.evaluate_all(MLP_S)

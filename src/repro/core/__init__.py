@@ -7,6 +7,7 @@ Layout:
   tacitmap.py       the proposed vertical mapping (functional simulator)
   custbinarymap.py  the SotA baseline mapping [15]
   wdm.py            wavelength-division multiplexing (VMM -> MMM)
+  engine.py         pluggable execution-backend registry (Engine protocol)
   einsteinbarrier.py  Node/Tile/ECore/VCore hierarchy + placement
   costmodel.py      latency/energy analytical models (Fig. 7 / Fig. 8)
   networks.py       the 6 MlBench BNN workloads
@@ -19,6 +20,7 @@ from repro.core import (
     crossbar,
     custbinarymap,
     einsteinbarrier,
+    engine,
     model,
     networks,
     tacitmap,
@@ -31,6 +33,7 @@ __all__ = [
     "crossbar",
     "custbinarymap",
     "einsteinbarrier",
+    "engine",
     "model",
     "networks",
     "tacitmap",

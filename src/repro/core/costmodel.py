@@ -14,9 +14,14 @@ Designs (§V-B of the paper):
   overhead (the paper's observation 4: GPUs win on serialization-heavy
   MLPs, can lose on small CNNs).
 
-Step-count structure is *derived from the mappings* (see
-``tacitmap.steps_for`` / ``custbinarymap.steps_for`` / ``wdm.steps_for``);
-device constants are calibrated against the paper's reported bands
+Step-count structure is *derived from the mappings*: each CIM design
+names an execution backend in the ``repro.core.engine`` registry
+(``engine_name``) and binary-layer step counts come from that engine's
+``steps_for`` — one interface instead of per-mapping special cases.
+Binary-layer energy dispatches the same way through
+:func:`register_binary_energy`, so a new backend plugs its counters in
+without touching this module's evaluation loop.
+Device constants are calibrated against the paper's reported bands
 because the underlying MNEMOSENE device characterizations are not
 public. Every constant lives in one dataclass below; the calibration is
 asserted (with tolerance bands) in ``benchmarks/paper_latency.py``.
@@ -42,7 +47,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
+from repro.core import engine as engine_lib
 from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
 from repro.core.networks import LayerDesc, NetworkDesc
 
@@ -80,6 +87,15 @@ class CIMParams:
     @property
     def k(self) -> int:
         return self.tile.wdm_k if self.use_wdm else 1
+
+    @property
+    def engine_name(self) -> str:
+        """The registered execution backend this design's binary layers
+        step like (WDM turns the TacitMap VMM into a K-way MMM)."""
+        return "wdm" if self.use_wdm else self.mapping
+
+    def engine(self) -> engine_lib.Engine:
+        return engine_lib.get_engine(self.engine_name, spec=self.tile)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,19 +148,22 @@ def _position_stream(params: CIMParams, layer: LayerDesc) -> int:
 
 
 def layer_steps(params: CIMParams, layer: LayerDesc) -> int:
-    """Sequential steps for one *batch* through this layer."""
+    """Sequential steps for one *batch* through this layer.
+
+    Binary layers delegate to the design's execution backend
+    (``Engine.steps_for`` — WDM grouping, row-serial baselines, etc. all
+    live behind that one interface); edge (hi-res) layers run the shared
+    bit-serial policy below.
+    """
     stream = _position_stream(params, layer)
+    if layer.binary:
+        return params.engine().steps_for(layer.m, layer.n, stream)
     if params.use_wdm:  # WDM groups the stream K vectors per step
         stream = math.ceil(stream / params.k)
-    if not layer.binary:
-        if params.mapping == "custbinarymap":
-            # digital near-memory unit: edge_parallel outputs per cycle
-            return stream * params.edge_bits * math.ceil(layer.n / params.edge_parallel)
-        return stream * params.edge_bits          # bit-serial hi-res VMM
-    if params.mapping == "tacitmap":
-        return stream                             # 1 VMM per slot
-    # CustBinaryMap: one weight vector per step
-    return stream * layer.n
+    if params.mapping == "custbinarymap":
+        # digital near-memory unit: edge_parallel outputs per cycle
+        return stream * params.edge_bits * math.ceil(layer.n / params.edge_parallel)
+    return stream * params.edge_bits              # bit-serial hi-res VMM
 
 
 def layer_latency_ns(params: CIMParams, layer: LayerDesc) -> float:
@@ -192,36 +211,45 @@ def tia_power_mw(params: CIMParams, n_cols: int) -> float:
     return n_cols * params.tile.p_tia_mw
 
 
-def layer_energy_pj(params: CIMParams, layer: LayerDesc) -> float:
-    """Energy for one *batch* through this layer (pJ)."""
-    tile = params.tile
-    stream = params.batch * layer.positions  # real vector slots (no repl. savings)
-    rt = _row_tiles(params, layer)
-    cols = layer.n
+# Binary-layer energy, dispatched by the design's execution backend —
+# the same seam as ``Engine.steps_for``: a new backend registers its
+# counter here instead of growing special cases in layer_energy_pj.
+_BINARY_ENERGY: dict[str, Callable[[CIMParams, LayerDesc], float]] = {}
 
-    if not layer.binary:
-        # Edge (hi-res) layers: shared high-precision path — identical
-        # energy for every CIM design. The paper's energy story (Fig. 8)
-        # is about binary layers' ADC-vs-SA readout; edge layers dilute
-        # both sides equally.
-        return stream * layer.m * cols * params.e_dig_mac_pj
 
-    if params.mapping == "custbinarymap":
-        # n row-reads per input vector; m 2T2R pairs sensed per read
-        reads = stream * layer.n
-        cell = reads * layer.m * 2 * tile.e_cell_read_fj * 1e-3
-        sense = reads * layer.m * params.e_pcsa_pj
-        return cell + sense
+def register_binary_energy(
+    name: str,
+) -> Callable[[Callable[[CIMParams, LayerDesc], float]], Callable[[CIMParams, LayerDesc], float]]:
+    def deco(fn: Callable[[CIMParams, LayerDesc], float]):
+        _BINARY_ENERGY[name] = fn
+        return fn
 
+    return deco
+
+
+@register_binary_energy("custbinarymap")
+def _cbm_binary_energy(params: CIMParams, layer: LayerDesc) -> float:
+    # n row-reads per input vector; m 2T2R pairs sensed per read
+    stream = params.batch * layer.positions
+    reads = stream * layer.n
+    cell = reads * layer.m * 2 * params.tile.e_cell_read_fj * 1e-3
+    sense = reads * layer.m * params.e_pcsa_pj
+    return cell + sense
+
+
+@register_binary_energy("tacitmap")
+@register_binary_energy("wdm")
+def _vmm_binary_energy(params: CIMParams, layer: LayerDesc) -> float:
     # VMM path (TacitMap / EinsteinBarrier binary layers)
-    activations = stream
+    tile = params.tile
+    stream = params.batch * layer.positions
+    cols = layer.n
+    activations = params.engine().steps_for(layer.m, layer.n, stream)
     rows_active = 2 * layer.m
-    if params.use_wdm:
-        activations = math.ceil(activations / params.k)
     cell = activations * rows_active * cols * tile.e_cell_read_fj * 1e-3
     # readout chain energy scales with crossbar *activations* (the paper:
     # WDM "uses the same crossbar, ADCs and other peripheries" per step)
-    conv = activations * cols * rt * params.e_adc_pj
+    conv = activations * cols * _row_tiles(params, layer) * params.e_adc_pj
     dyn = cell + conv
     if params.use_wdm:
         t_ns = activations * tile.t_vmm_ns
@@ -231,6 +259,18 @@ def layer_energy_pj(params: CIMParams, layer: LayerDesc) -> float:
         )
         dyn += static_mw * 1e-3 * t_ns  # mW·ns = pJ
     return dyn
+
+
+def layer_energy_pj(params: CIMParams, layer: LayerDesc) -> float:
+    """Energy for one *batch* through this layer (pJ)."""
+    if layer.binary:
+        return _BINARY_ENERGY[params.engine_name](params, layer)
+    # Edge (hi-res) layers: shared high-precision path — identical
+    # energy for every CIM design. The paper's energy story (Fig. 8)
+    # is about binary layers' ADC-vs-SA readout; edge layers dilute
+    # both sides equally.
+    stream = params.batch * layer.positions  # real vector slots (no repl. savings)
+    return stream * layer.m * layer.n * params.e_dig_mac_pj
 
 
 def network_energy_j(params: CIMParams, net: NetworkDesc) -> float:

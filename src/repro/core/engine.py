@@ -1,0 +1,299 @@
+"""Pluggable execution-engine registry — the seam every backend plugs into.
+
+The paper's central claim is that TacitMap / EinsteinBarrier "simply
+accelerate" BNN inference: every execution path computes the *same*
+XNOR+popcount contract (Eq. 1) and is therefore bit-exact and swappable.
+PIMBALL (arXiv:1812.03989) and the optical XNOR-bitcount accelerator
+(arXiv:2302.06405) frame that identity as the common contract across
+hardware backends; this module encodes exactly that contract in
+software.
+
+An :class:`Engine` executes ±1 binary matmuls::
+
+    binary_vmm(a_signs, w_signs)   # (..., m) x (m, n) -> (..., n)
+    binary_mmm(groups, w_signs)    # (G, K, m) x (m, n) -> (G, K, n)
+
+and exposes capability/cost metadata (``info``, ``steps_for``) that the
+analytical cost model and the benchmark sweeps consume uniformly.
+
+Capability matrix of the registered backends:
+
+====================  =======================================  ==========
+name                  models                                   native MMM
+====================  =======================================  ==========
+``reference``         Eq. 1 in plain jnp (ground truth)        no
+``tacitmap``          tiled ePCM/oPCM crossbar simulator       no
+``wdm``               oPCM + K-wavelength WDM (EinsteinBarrier) yes (K)
+``packed``            TPU bit-packed XNOR+popcount Pallas       no
+``custbinarymap``     2T2R/PCSA row-serial baseline [15]        no
+====================  =======================================  ==========
+
+All are bit-exact against ``reference`` (tests/test_engines.py). The
+``packed`` backend is the TPU-native analogue of the crossbar step —
+32 weights per int32 lane, XOR + population_count on the VPU — and runs
+in Pallas interpret mode on CPU so it is testable everywhere.
+
+Consumers resolve engines by name (CLI flags, configs) or pass
+:class:`Engine` instances directly::
+
+    eng = get_engine("packed")
+    out = eng.binary_vmm(a_signs, w_signs)
+
+New backends (multi-level cells, sharded crossbars, GPU) register with
+:func:`register_engine` and become available to models, serving and
+benchmarks without touching any consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bnn, custbinarymap, tacitmap, wdm
+from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineInfo:
+    """Capability/cost metadata for one backend (the capability matrix)."""
+
+    name: str
+    description: str
+    hardware: str                 # what physical substrate this models
+    native_mmm: bool = False      # executes K input vectors per step (WDM)
+    packed: bool = False          # bit-packed operands (1 bit / lane)
+    default_spec: str = "ePCM"    # which tile catalogue entry it defaults to
+
+    @property
+    def bit_exact(self) -> bool:
+        """Every registered engine must reproduce Eq. 1 exactly."""
+        return True
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The execution contract every backend implements.
+
+    ``binary_vmm``/``binary_mmm`` consume ±1-valued arrays (any float or
+    integer carrier) and return the exact ±1 dot products (integer
+    valued; the carrier dtype may differ per backend — callers cast).
+    """
+
+    name: str
+    info: EngineInfo
+    spec: CrossbarSpec
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array: ...
+
+    def binary_mmm(self, groups: Array, w_signs: Array) -> Array: ...
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int: ...
+
+
+class _EngineBase:
+    """Shared plumbing: spec binding, MMM-via-VMM fallback, repr."""
+
+    info: EngineInfo
+
+    def __init__(self, spec: CrossbarSpec | None = None):
+        default = OPCM_TILE if self.info.default_spec == "oPCM" else EPCM_TILE
+        self.spec = spec or default
+
+    @property
+    def name(self) -> str:
+        return self.info.name
+
+    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
+        """(G, K, m) x (m, n) -> (G, K, n); default: flatten to a VMM."""
+        g, k, m = groups.shape
+        out = self.binary_vmm(groups.reshape(g * k, m), w_signs)
+        return out.reshape(g, k, -1)
+
+    def with_spec(self, spec: CrossbarSpec) -> "Engine":
+        """Same backend rebound to another tile spec (subclasses with
+        extra constructor state override to preserve it)."""
+        return type(self)(spec)
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        """Sequential hardware steps for ``n_inputs`` vectors (cost model)."""
+        del m, n
+        return n_inputs
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Engine {self.name} spec={self.spec.technology}>"
+
+
+class ReferenceEngine(_EngineBase):
+    """Eq. 1 in plain jnp — the ground truth every backend must match."""
+
+    info = EngineInfo(
+        name="reference",
+        description="plain jnp ±1 matmul (Eq. 1 ground truth)",
+        hardware="any (XLA)",
+    )
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        return bnn.binary_matmul_signs(a_signs, w_signs)
+
+
+class TacitMapEngine(_EngineBase):
+    """The paper's mapping run through the full tiled-crossbar simulator."""
+
+    info = EngineInfo(
+        name="tacitmap",
+        description="tiled crossbar functional simulator (complement VMM)",
+        hardware="ePCM/oPCM crossbar tiles + ADC readout",
+    )
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        return tacitmap.binary_matmul(a_signs, w_signs, self.spec)
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        return tacitmap.steps_for(m, n, n_inputs, self.spec)
+
+
+class WDMEngine(_EngineBase):
+    """EinsteinBarrier: oPCM crossbar + K-wavelength MMM steps."""
+
+    info = EngineInfo(
+        name="wdm",
+        description="oPCM + WDM: K input vectors per crossbar step (MMM)",
+        hardware="oPCM photonic crossbar, K-wavelength transmitter",
+        native_mmm=True,
+        default_spec="oPCM",
+    )
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        m = a_signs.shape[-1]
+        mapped = tacitmap.map_weights(
+            bnn.signs_to_bits(w_signs).astype(jnp.int32), self.spec
+        )
+        flat = a_signs.reshape(-1, m)
+        pc = wdm.wdm_apply(mapped, bnn.signs_to_bits(flat))
+        return (2 * pc - m).reshape(*a_signs.shape[:-1], -1)
+
+    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
+        m = groups.shape[-1]
+        mapped = tacitmap.map_weights(
+            bnn.signs_to_bits(w_signs).astype(jnp.int32), self.spec
+        )
+        pc = wdm.mmm(mapped, bnn.signs_to_bits(groups))
+        return 2 * pc - m
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        del m, n
+        return wdm.steps_for(n_inputs, self.spec.wdm_k)
+
+
+class PackedEngine(_EngineBase):
+    """Bit-packed XNOR+popcount Pallas kernel — the TPU-native crossbar step.
+
+    32 binary weights/activations per int32 lane, XOR + population_count
+    on the VPU (kernels/xnor_matmul.py). On CPU the kernel runs in
+    Pallas interpret mode automatically (``interpret=None``), so the
+    backend is testable everywhere; on TPU it compiles.
+    """
+
+    info = EngineInfo(
+        name="packed",
+        description="bit-packed XNOR+popcount Pallas kernel (Eq. 1 affine)",
+        hardware="TPU VPU (interpret-mode on CPU)",
+        packed=True,
+    )
+
+    def __init__(self, spec: CrossbarSpec | None = None, *, interpret: bool | None = None):
+        super().__init__(spec)
+        self.interpret = interpret
+
+    def with_spec(self, spec: CrossbarSpec) -> "PackedEngine":
+        return type(self)(spec, interpret=self.interpret)
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        from repro.kernels import ops
+
+        return ops.xnor_matmul(a_signs, w_signs, interpret=self.interpret)
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        # one fused kernel launch executes the whole (B, m, n) matmul
+        del m, n, n_inputs
+        return 1
+
+
+class CustBinaryMapEngine(_EngineBase):
+    """The SotA baseline mapping [15]: one weight vector per step (PCSA)."""
+
+    info = EngineInfo(
+        name="custbinarymap",
+        description="2T2R row-serial baseline (PCSA readout, digital popcount)",
+        hardware="ePCM 2T2R arrays + precharge sense amplifiers",
+    )
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        return custbinarymap.binary_matmul(a_signs, w_signs, self.spec)
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        return custbinarymap.steps_for(m, n, n_inputs, self.spec)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Engine]] = {}
+
+
+def register_engine(name: str, factory: Callable[..., Engine]) -> None:
+    """Register a backend factory: ``factory(spec=None, **kw) -> Engine``.
+
+    Re-registration under an existing name replaces the factory (useful
+    for tests and for swapping in tuned variants).
+    """
+    _REGISTRY[name] = factory
+
+
+def list_engines() -> list[str]:
+    """Sorted names of every registered backend."""
+    return sorted(_REGISTRY)
+
+
+def get_engine(name: str, spec: CrossbarSpec | None = None, **kw) -> Engine:
+    """Instantiate a registered backend, optionally binding a tile spec."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {', '.join(list_engines())}"
+        ) from None
+    return factory(spec, **kw)
+
+
+def resolve(engine: str | Engine, spec: CrossbarSpec | None = None) -> Engine:
+    """Accept an engine name or an already-constructed Engine instance."""
+    if isinstance(engine, str):
+        return get_engine(engine, spec)
+    if spec is not None and engine.spec is not spec:
+        if hasattr(engine, "with_spec"):  # preserves extra ctor state
+            return engine.with_spec(spec)
+        return get_engine(engine.name, spec)
+    return engine
+
+
+def engine_info(name: str) -> EngineInfo:
+    """Capability metadata without instantiating arrays/specs."""
+    return get_engine(name).info
+
+
+for _cls in (
+    ReferenceEngine,
+    TacitMapEngine,
+    WDMEngine,
+    PackedEngine,
+    CustBinaryMapEngine,
+):
+    register_engine(_cls.info.name, _cls)

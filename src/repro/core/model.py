@@ -5,14 +5,11 @@ Training uses latent real-valued master weights with STE binarization
 resolutions while keeping the actual weights binarized"); first and last
 layers stay high-precision.
 
-Inference can run each binary layer through one of three engines:
-
-* ``"reference"`` — Eq. 1 in plain jnp (``bnn.binary_matmul_signs``).
-* ``"tacitmap"``  — the full tiled-crossbar functional simulator.
-* ``"wdm"``       — the oPCM WDM path (K-grouped MMM steps).
-
-All three are bit-exact (tests assert it) — the paper's point that the
-mapping "simply accelerates" BNNs without touching accuracy.
+Inference runs each binary layer through any backend registered in
+``repro.core.engine`` (reference / tacitmap / wdm / packed / ...) —
+pass an engine name or an :class:`repro.core.engine.Engine` instance.
+All backends are bit-exact (tests assert it) — the paper's point that
+the mapping "simply accelerates" BNNs without touching accuracy.
 
 Convolutions are expressed as im2col + VMM, which is literally how the
 crossbar executes them (one im2col position = one input vector).
@@ -22,17 +19,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bnn, tacitmap, wdm
-from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
+from repro.core import bnn
+from repro.core import engine as engine_lib
+from repro.core.crossbar import CrossbarSpec
+from repro.core.engine import Engine
 
 Array = jax.Array
 
-Engine = str  # "reference" | "tacitmap" | "wdm"
+EngineLike = str | Engine  # registry name or constructed backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,33 +80,15 @@ def mlp_forward_train(params: dict, x: Array, cfg: MLPConfig) -> Array:
     return h
 
 
-def _binary_layer_infer(
-    a_signs: Array, w_signs: Array, engine: Engine, spec: CrossbarSpec
-) -> Array:
-    if engine == "reference":
-        return bnn.binary_matmul_signs(a_signs, w_signs)
-    if engine == "tacitmap":
-        return tacitmap.binary_matmul(a_signs, w_signs, spec)
-    if engine == "wdm":
-        m = a_signs.shape[-1]
-        mapped = tacitmap.map_weights(
-            bnn.signs_to_bits(w_signs).astype(jnp.int32), spec
-        )
-        flat = a_signs.reshape(-1, m)
-        pc = wdm.wdm_apply(mapped, bnn.signs_to_bits(flat))
-        return (2 * pc - m).reshape(*a_signs.shape[:-1], -1)
-    raise ValueError(f"unknown engine {engine!r}")
-
-
 def mlp_forward_infer(
     params: dict,
     x: Array,
     cfg: MLPConfig,
-    engine: Engine = "reference",
+    engine: EngineLike = "reference",
     spec: CrossbarSpec | None = None,
 ) -> Array:
     """Deploy-time forward: weights pre-binarized, selectable engine."""
-    spec = spec or (OPCM_TILE if engine == "wdm" else EPCM_TILE)
+    eng = engine_lib.resolve(engine, spec)
     h = x
     for i in range(cfg.n_layers):
         w = params[f"w{i}"]
@@ -117,7 +97,7 @@ def mlp_forward_infer(
         else:
             a = jnp.where(h >= 0, 1.0, -1.0)
             wb = jnp.where(w >= 0, 1.0, -1.0)
-            pc = _binary_layer_infer(a, wb, engine, spec)
+            pc = eng.binary_vmm(a, wb)
             h = pc.astype(jnp.float32) / math.sqrt(w.shape[0]) + params[f"b{i}"]
         if i < cfg.n_layers - 1:
             h = params[f"g{i}"] * h
@@ -187,11 +167,11 @@ def conv_forward(
     x: Array,
     cfg: ConvConfig,
     train: bool = True,
-    engine: Engine = "reference",
+    engine: EngineLike = "reference",
     spec: CrossbarSpec | None = None,
 ) -> Array:
     """(B, H, W, C) images -> logits. Binary layers = all but first/last."""
-    spec = spec or (OPCM_TILE if engine == "wdm" else EPCM_TILE)
+    eng = engine_lib.resolve(engine, spec)
     n_fc = len(cfg.fcs)
     h = x
     for i, ((out_ch, k), pool) in enumerate(zip(cfg.convs, cfg.pools)):
@@ -208,7 +188,7 @@ def conv_forward(
             else:
                 a = jnp.where(cols >= 0, 1.0, -1.0)
                 wb = jnp.where(w >= 0, 1.0, -1.0)
-                h = _binary_layer_infer(a, wb, engine, spec).astype(jnp.float32) * scale
+                h = eng.binary_vmm(a, wb).astype(jnp.float32) * scale
         h = params[f"cg{i}"] * h  # learnable pre-sign affine (no ReLU: see mlp)
         h = _avgpool(h, pool)
     h = h.reshape(h.shape[0], -1)
@@ -225,7 +205,7 @@ def conv_forward(
                 a = jnp.where(h >= 0, 1.0, -1.0)
                 wb = jnp.where(w >= 0, 1.0, -1.0)
                 h = (
-                    _binary_layer_infer(a, wb, engine, spec).astype(jnp.float32) * scale
+                    eng.binary_vmm(a, wb).astype(jnp.float32) * scale
                     + params[f"fb{i}"]
                 )
     return h

@@ -1,0 +1,20 @@
+"""Version shims for the Pallas TPU API surface.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; the kernels in this package run
+on both spellings via this alias.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # fail at import, not at the first kernel call
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is not supported by the "
+        "Pallas kernels in repro.kernels"
+    )

@@ -57,6 +57,21 @@ def _pad_to(x: Array, mult: int, axis: int) -> Array:
     return jnp.pad(x, widths)
 
 
+def _row_block(requested: int, size: int, unit: int = 8) -> int:
+    """Shrink a row-block size for operands smaller than one block.
+
+    The kernels require dims to be block multiples, so small/ragged
+    operands (the model zoo's odd layer widths, single-vector batches)
+    are padded UP — but padding a 6-row batch to a 128-row block wastes
+    ~20x the kernel work. Rows are the TPU sublane dim, so any multiple
+    of the sublane tile (8 for int32/fp32 operands, 16 for bf16) is a
+    legal block: clamp to the operand size rounded up to ``unit``.
+    Lane-dim blocks (n, packed words) stay as requested — sub-128 lane
+    tiles are where Mosaic layouts get inefficient.
+    """
+    return min(requested, max(unit, -(-size // unit) * unit))
+
+
 # ---------------------------------------------------------------------------
 # XNOR matmul (packed popcount path)
 # ---------------------------------------------------------------------------
@@ -82,6 +97,7 @@ def xnor_matmul(
     a2 = a_signs.reshape(-1, m)
     ap = pack_bits((a2 > 0).astype(jnp.uint32))
     wp = pack_bits((w_signs > 0).astype(jnp.uint32), axis=0)
+    bm = _row_block(bm, a2.shape[0])
     ap = _pad_to(_pad_to(ap, bm, 0), bkw, 1)
     wp = _pad_to(_pad_to(wp, bkw, 0), bn, 1)
     ham = _xnor_kernel.hamming_matmul_packed(ap, wp, bm=bm, bn=bn, bkw=bkw, interpret=interpret)
@@ -107,6 +123,7 @@ def wdm_mmm(
     """(G, K, m) x (m, n) -> (G, K, n): K wavelengths per systolic pass."""
     g, k, m = groups.shape
     lhs = groups.reshape(g * k, m).astype(jnp.bfloat16)
+    bb = _row_block(bb, g * k, unit=16)  # bf16 sublane tile
     lhs = _pad_to(_pad_to(lhs, bb, 0), bm, 1)
     rhs = _pad_to(_pad_to(w.astype(jnp.bfloat16), bm, 0), bn, 1)
     out = _wdm_kernel.mmm(lhs, rhs, bb=bb, bn=bn, bm=bm, interpret=interpret)
@@ -132,7 +149,9 @@ def bitlinear(
     """(..., m) fp x (m, n) ±1 x (n,) -> (..., n) fp32 fused BitLinear."""
     m = x.shape[-1]
     lead = x.shape[:-1]
-    x2 = _pad_to(_pad_to(x.reshape(-1, m), bb, 0), bm, 1)
+    x2 = x.reshape(-1, m)
+    bb = _row_block(bb, x2.shape[0], unit=16 if x.dtype == jnp.bfloat16 else 8)
+    x2 = _pad_to(_pad_to(x2, bb, 0), bm, 1)
     # pad weight ROWS with zeros: pad x columns binarize to +1 and hit
     # zero rows -> contribute nothing (see kernel docstring)
     wp = _pad_to(_pad_to(w_signs, bm, 0), bn, 1)

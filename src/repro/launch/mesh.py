@@ -13,7 +13,17 @@ pure-DP gradient reductions — optionally int8-compressed — cross pods).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; Auto is the default either way
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+
+except ImportError:  # older jax: make_mesh has no axis_types parameter
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,9 +39,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before the first jax import (see launch/dryrun.py)"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, devices=devices, **_axis_kwargs(len(axes)))
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
@@ -40,5 +48,5 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     for s in shape:
         n *= s
     return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:n], axis_types=(AxisType.Auto,) * len(axes)
+        shape, axes, devices=jax.devices()[:n], **_axis_kwargs(len(axes))
     )

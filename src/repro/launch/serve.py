@@ -4,13 +4,22 @@ a fixed-capacity KV/SSM cache.
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --batch 4 --prompt-len 32 --gen 16
 
+    # serve the binarized projections through the packed Pallas kernel:
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --engine packed
+
 Uses the same decode_step the dry-run lowers for the ``decode_*``
 cells, so serving on the production mesh is the identical program.
+``--engine`` picks any backend registered in ``repro.core.engine``; a
+non-reference engine implies ``quant="bnn"`` (the backends execute the
+binarized ±1 projections — there is nothing for them to run in an fp
+model).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 
@@ -22,17 +31,31 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--engine",
+        default="reference",
+        help="execution backend for binarized projections "
+        "(see repro.core.engine.list_engines())",
+    )
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_smoke_config
+    from repro.core import engine as engine_lib
     from repro.data import lm_batch
     from repro.models import encdec as encdec_lib
     from repro.models import lm as lm_lib
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.engine != "reference":
+        try:
+            eng = engine_lib.get_engine(args.engine)
+        except ValueError as e:
+            ap.error(str(e))
+        cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=args.engine)
+        print(f"[serve] engine={eng.name} ({eng.info.description})")
     max_len = args.prompt_len + args.gen
     key = jax.random.key(args.seed)
     params = (
@@ -85,7 +108,8 @@ def main() -> int:
     t_decode = time.time() - t0
 
     gen = jnp.stack(out, axis=1)
-    print(f"[serve] arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
+    print(f"[serve] arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"quant={cfg.quant} engine={cfg.bnn_engine}")
     print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode {args.gen - 1} steps "
           f"{t_decode*1e3:.1f} ms ({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
     print(f"[serve] generated[0,:8] = {gen[0, :8].tolist()}")

@@ -56,6 +56,11 @@ class ModelConfig:
     frontend_len: int = 256          # patches / frames per sample
     # quantization: "none" or "bnn" (the paper's technique as a feature)
     quant: Literal["none", "bnn"] = "none"
+    # execution backend for binarized projections at inference time: any
+    # name registered in repro.core.engine ("reference" keeps the plain
+    # differentiable matmul; "packed" routes through the Pallas
+    # XNOR+popcount kernel). Training always uses "reference".
+    bnn_engine: str = "reference"
     # misc
     rope_theta: float = 10_000.0
     norm_eps: float = 1e-5

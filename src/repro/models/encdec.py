@@ -23,6 +23,7 @@ from repro.models.layers import (
     dense,
     ffn,
     ffn_init,
+    infer_engine,
     rms_norm,
 )
 
@@ -141,16 +142,21 @@ def prefill(params: Params, src_embeds: Array, tgt_tokens: Array, cfg: ModelConf
     enc_out = encode(params, src_embeds, cfg)
     positions = jnp.arange(tgt_tokens.shape[1])
     h = params["embed"][tgt_tokens].astype(ACT_DTYPE)
+    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
 
     def body(h, lp):
         hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
-        mix, (k, v) = attention_block(lp["self_attn"], hn, positions, cfg, quant=cfg.quant)
+        mix, (k, v) = attention_block(
+            lp["self_attn"], hn, positions, cfg, quant=cfg.quant, engine=eng
+        )
         h = h + mix
         hn = rms_norm(h, lp["norm_x"], cfg.norm_eps)
         ck, cv = _cross_kv(lp, enc_out, cfg)
-        h = h + cross_attention_block(lp["cross_attn"], hn, (ck, cv), positions, cfg, cfg.quant)
+        h = h + cross_attention_block(
+            lp["cross_attn"], hn, (ck, cv), positions, cfg, cfg.quant, eng
+        )
         hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
-        h = h + ffn(lp["ffn"], hn, cfg.quant)
+        h = h + ffn(lp["ffn"], hn, cfg.quant, eng)
         cache = {
             "self_k": k.astype(ACT_DTYPE),
             "self_v": v.astype(ACT_DTYPE),
@@ -183,23 +189,25 @@ def decode_step(params: Params, token: Array, pos: Array, caches: dict, cfg: Mod
     """One decoder step with fixed cross-KV. token (B,), pos scalar."""
     b = token.shape[0]
     h = params["embed"][token[:, None]].astype(ACT_DTYPE)
+    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
 
     def body(h, xs):
         lp, cache_l = xs
         hn = rms_norm(h, lp["norm1"], cfg.norm_eps)
         mix, nk, nv = attention_decode_step(
-            lp["self_attn"], hn, pos, cache_l["self_k"], cache_l["self_v"], cfg, quant=cfg.quant
+            lp["self_attn"], hn, pos, cache_l["self_k"], cache_l["self_v"], cfg,
+            quant=cfg.quant, engine=eng,
         )
         h = h + mix
         hn = rms_norm(h, lp["norm_x"], cfg.norm_eps)
-        q = dense(lp["cross_attn"]["q"], hn, cfg.quant).reshape(b, 1, cfg.n_heads, cfg.hd)
+        q = dense(lp["cross_attn"]["q"], hn, cfg.quant, eng).reshape(b, 1, cfg.n_heads, cfg.hd)
         src_len = cache_l["cross_k"].shape[1]
         cross = decode_attention(
             q, cache_l["cross_k"], cache_l["cross_v"], jnp.full((b,), src_len, jnp.int32)
         )
-        h = h + dense(lp["cross_attn"]["o"], cross.reshape(b, 1, cfg.n_heads * cfg.hd), cfg.quant)
+        h = h + dense(lp["cross_attn"]["o"], cross.reshape(b, 1, cfg.n_heads * cfg.hd), cfg.quant, eng)
         hn = rms_norm(h, lp["norm2"], cfg.norm_eps)
-        h = h + ffn(lp["ffn"], hn, cfg.quant)
+        h = h + ffn(lp["ffn"], hn, cfg.quant, eng)
         new_cache = dict(cache_l, self_k=nk, self_v=nv)
         return h, new_cache
 

@@ -81,18 +81,39 @@ def _rms_norm_bwd(eps: float, res, g):
 rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
 
 
-def dense(p: Params, x: Array, quant: str = "none") -> Array:
+def infer_engine(cfg: ModelConfig):
+    """Resolve ``cfg.bnn_engine`` into an execution backend for the
+    binarized projections of the *inference* paths (prefill/decode).
+
+    Returns ``None`` for the reference backend: the plain matmul below
+    is both the reference numerics and the only differentiable (STE)
+    path, so training always goes through it.
+    """
+    if cfg.quant != "bnn" or cfg.bnn_engine in ("", "reference"):
+        return None
+    from repro.core import engine as engine_lib
+
+    return engine_lib.get_engine(cfg.bnn_engine)
+
+
+def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     """Linear layer; ``quant="bnn"`` routes through the paper's BitLinear:
     sign-binarized weights/activations (STE in training) with per-tensor
-    fp scales — first/last layers of a model never use it (§II-B)."""
+    fp scales — first/last layers of a model never use it (§II-B).
+
+    ``engine`` (a ``repro.core.engine.Engine``) executes the ±1 matmul
+    through any registered backend — e.g. the packed XNOR+popcount
+    Pallas kernel. Engines are bit-exact vs the plain matmul but not
+    differentiable; inference callers resolve one via ``infer_engine``.
+    """
     w = p["w"]
     if quant == "bnn":
         alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
         beta = jnp.mean(jnp.abs(x).astype(jnp.float32))
         xb = bnn.binarize_ste(x.astype(jnp.float32))
         wb = bnn.binarize_ste(w)
-        out = (xb @ wb) * (alpha * beta)
-        out = out.astype(ACT_DTYPE)
+        dot = xb @ wb if engine is None else engine.binary_vmm(xb, wb).astype(jnp.float32)
+        out = (dot * (alpha * beta)).astype(ACT_DTYPE)
     else:
         out = jnp.matmul(x, w.astype(x.dtype))
     if "b" in p:
@@ -259,15 +280,16 @@ def attention_block(
     *,
     causal: bool = True,
     quant: str = "none",
+    engine=None,
 ) -> tuple[Array, tuple[Array, Array]]:
     """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
     b, s, _ = x.shape
     hd = cfg.hd
     # hints pin head-parallel attention over the model axis (dropped
     # per-dim when indivisible — e.g. tinyllama's 4 KV heads on tp=16)
-    q = hint(dense(p["q"], x, quant).reshape(b, s, cfg.n_heads, hd), "dp", None, "model", None)
-    k = hint(dense(p["k"], x, quant).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
-    v = hint(dense(p["v"], x, quant).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    q = hint(dense(p["q"], x, quant, engine).reshape(b, s, cfg.n_heads, hd), "dp", None, "model", None)
+    k = hint(dense(p["k"], x, quant, engine).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    v = hint(dense(p["v"], x, quant, engine).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     out = multi_head_attention(
@@ -275,7 +297,7 @@ def attention_block(
         impl=cfg.attn_impl,
     )
     out = hint(out, "dp", None, "model", None)
-    out = dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), quant)
+    out = dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), quant, engine)
     return out, (k, v)
 
 
@@ -286,18 +308,19 @@ def cross_attention_block(
     positions: Array,
     cfg: ModelConfig,
     quant: str = "none",
+    engine=None,
 ) -> Array:
     """Decoder cross-attention against precomputed encoder K/V."""
     b, s, _ = x.shape
     hd = cfg.hd
     k, v = kv
-    q = dense(p["q"], x, quant).reshape(b, s, cfg.n_heads, hd)
+    q = dense(p["q"], x, quant, engine).reshape(b, s, cfg.n_heads, hd)
     src_pos = jnp.arange(k.shape[1])
     out = multi_head_attention(
         q, k, v, positions, src_pos, causal=False, chunk=cfg.attn_chunk,
         impl=cfg.attn_impl,
     )
-    return dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), quant)
+    return dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), quant, engine)
 
 
 def attention_decode_step(
@@ -308,6 +331,7 @@ def attention_decode_step(
     cache_v: Array,
     cfg: ModelConfig,
     quant: str = "none",
+    engine=None,
 ) -> tuple[Array, Array, Array]:
     """One-token step. x (B, 1, d); pos scalar int32 OR (B,) per-slot
     positions (continuous batching); caches (B, T, KV, D).
@@ -316,9 +340,9 @@ def attention_decode_step(
     """
     b = x.shape[0]
     hd = cfg.hd
-    q = hint(dense(p["q"], x, quant).reshape(b, 1, cfg.n_heads, hd), "dp", None, "model", None)
-    k = dense(p["k"], x, quant).reshape(b, 1, cfg.n_kv_heads, hd)
-    v = dense(p["v"], x, quant).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = hint(dense(p["q"], x, quant, engine).reshape(b, 1, cfg.n_heads, hd), "dp", None, "model", None)
+    k = dense(p["k"], x, quant, engine).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = dense(p["v"], x, quant, engine).reshape(b, 1, cfg.n_kv_heads, hd)
     pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     posb = pos_vec[:, None]
     q = rope(q, posb, cfg.rope_theta)
@@ -327,7 +351,7 @@ def attention_decode_step(
     cache_k = cache_k.at[rows, pos_vec].set(k[:, 0].astype(cache_k.dtype))
     cache_v = cache_v.at[rows, pos_vec].set(v[:, 0].astype(cache_v.dtype))
     out = decode_attention(q, cache_k, cache_v, pos_vec + 1)
-    out = dense(p["o"], out.reshape(b, 1, cfg.n_heads * hd), quant)
+    out = dense(p["o"], out.reshape(b, 1, cfg.n_heads * hd), quant, engine)
     return out, cache_k, cache_v
 
 
@@ -346,7 +370,7 @@ def ffn_init(key: jax.Array, cfg: ModelConfig) -> Params:
     }
 
 
-def ffn(p: Params, x: Array, quant: str = "none") -> Array:
-    h = jax.nn.silu(dense(p["w1"], x, quant).astype(jnp.float32)).astype(x.dtype)
-    h = hint(h * dense(p["w3"], x, quant), "dp", None, "model")
-    return dense(p["w2"], h, quant)
+def ffn(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
+    h = jax.nn.silu(dense(p["w1"], x, quant, engine).astype(jnp.float32)).astype(x.dtype)
+    h = hint(h * dense(p["w3"], x, quant, engine), "dp", None, "model")
+    return dense(p["w2"], h, quant, engine)

@@ -29,6 +29,7 @@ from repro.models.layers import (
     dense,
     ffn,
     ffn_init,
+    infer_engine,
     rms_norm,
 )
 
@@ -220,12 +221,15 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.0
 
 
 def _apply_repeat_prefill(h: Array, slot_params: Params, positions: Array, cfg: ModelConfig):
+    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
     caches = {}
     for i, kind in enumerate(cfg.pattern):
         sp = slot_params[f"slot{i}"]
         hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
         if kind.mixer == "attn":
-            mix, (k, v) = attention_block(sp["attn"], hn, positions, cfg, quant=cfg.quant)
+            mix, (k, v) = attention_block(
+                sp["attn"], hn, positions, cfg, quant=cfg.quant, engine=eng
+            )
             caches[f"slot{i}"] = {"k": k.astype(ACT_DTYPE), "v": v.astype(ACT_DTYPE)}
         else:
             mix, st = ssm_lib.mamba_block(sp["mamba"], hn, cfg)
@@ -236,7 +240,7 @@ def _apply_repeat_prefill(h: Array, slot_params: Params, positions: Array, cfg: 
             if kind.moe:
                 f, _ = moe_lib.moe_ffn(sp["moe"], hn, cfg)
             else:
-                f = ffn(sp["ffn"], hn, cfg.quant)
+                f = ffn(sp["ffn"], hn, cfg.quant, eng)
             h = h + f
     return h, caches
 
@@ -289,6 +293,7 @@ def decode_step(params: Params, token: Array, pos: Array, caches: Params, cfg: M
     ``init_cache``/``prefill``. Returns (logits (B, V), new_caches)."""
     embeds = embed_tokens(params, token[:, None])  # (B, 1, d)
     h = embeds.astype(ACT_DTYPE)
+    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
 
     def body(h, xs):
         slot_p, cache_r = xs
@@ -298,7 +303,8 @@ def decode_step(params: Params, token: Array, pos: Array, caches: Params, cfg: M
             hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
             if kind.mixer == "attn":
                 mix, nk, nv = attention_decode_step(
-                    sp["attn"], hn, pos, cp["k"], cp["v"], cfg, quant=cfg.quant
+                    sp["attn"], hn, pos, cp["k"], cp["v"], cfg, quant=cfg.quant,
+                    engine=eng,
                 )
                 new_cache[f"slot{i}"] = {"k": nk, "v": nv}
             else:
@@ -310,7 +316,7 @@ def decode_step(params: Params, token: Array, pos: Array, caches: Params, cfg: M
                 if kind.moe:
                     f, _ = moe_lib.moe_ffn(sp["moe"], hn, cfg)
                 else:
-                    f = ffn(sp["ffn"], hn, cfg.quant)
+                    f = ffn(sp["ffn"], hn, cfg.quant, eng)
                 h = h + f
         return h, new_cache
 

@@ -24,6 +24,13 @@ Design:
 
 This engine is CPU/TPU-agnostic pure JAX over the model zoo's
 prefill/decode entry points (decoder-only archs incl. SSM/hybrid).
+
+Binarized models (``cfg.quant == "bnn"``) can serve their hidden
+projections through any execution backend registered in
+``repro.core.engine`` (``engine="packed"`` routes prefill and every
+decode tick through the bit-packed XNOR+popcount Pallas kernel) — all
+backends are bit-exact, so continuous batching stays semantically
+invisible regardless of the backend.
 """
 
 from __future__ import annotations
@@ -59,7 +66,16 @@ class ServingEngine:
         *,
         max_batch: int = 4,
         max_len: int = 256,
+        engine: str | None = None,
     ):
+        if engine is not None and engine != "reference":
+            from repro.core import engine as engine_lib
+
+            engine_lib.get_engine(engine)  # validate the name eagerly
+            # a non-reference engine executes the binarized projections,
+            # so it implies quant="bnn" (same contract as launch/serve.py
+            # --engine); without this the flag would be a silent no-op
+            cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=engine)
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch

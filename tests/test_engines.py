@@ -1,0 +1,237 @@
+"""Engine registry: every registered backend is bit-identical to
+``reference`` — the paper's claim that the mappings "simply accelerate"
+BNNs without touching accuracy, encoded as the registry's contract.
+
+The ``packed`` backend runs its Pallas kernel in interpret mode on CPU
+(automatic via ``interpret=None``), so this file is a meaningful gate on
+any machine; the ``tpu``-marked case compiles the same kernel for real.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_lib
+from repro.core import model
+from repro.core.crossbar import CrossbarSpec
+
+ENGINES = engine_lib.list_engines()
+
+RAGGED_SHAPES = [
+    (1, 32, 1),      # minimal
+    (6, 20, 7),      # everything below one packed block
+    (4, 100, 30),    # ragged m/n
+    (130, 513, 129), # one past packed block boundaries
+]
+
+
+def _signs(rng, shape):
+    return jnp.asarray(rng.choice(np.array([-1.0, 1.0], np.float32), size=shape))
+
+
+def _as_int(x):
+    return np.asarray(x).astype(np.int64)
+
+
+class TestRegistry:
+    def test_required_backends_registered(self):
+        assert {"reference", "tacitmap", "wdm", "packed"} <= set(ENGINES)
+
+    def test_unknown_engine_raises(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            engine_lib.get_engine("does-not-exist")
+
+    def test_resolve_passthrough_and_name(self):
+        eng = engine_lib.get_engine("packed")
+        assert engine_lib.resolve(eng) is eng
+        assert engine_lib.resolve("tacitmap").name == "tacitmap"
+
+    def test_resolve_rebinds_spec(self):
+        spec = CrossbarSpec(rows=64, cols=32)
+        eng = engine_lib.resolve(engine_lib.get_engine("tacitmap"), spec)
+        assert eng.spec is spec
+
+    def test_info_metadata(self):
+        for name in ENGINES:
+            info = engine_lib.engine_info(name)
+            assert info.name == name
+            assert info.bit_exact
+            assert info.hardware
+        assert engine_lib.engine_info("wdm").native_mmm
+        assert engine_lib.engine_info("packed").packed
+
+    def test_register_replaces_and_restores(self):
+        sentinel = object()
+        original = engine_lib._REGISTRY["reference"]
+        try:
+            engine_lib.register_engine("reference", lambda spec=None: sentinel)
+            assert engine_lib.get_engine("reference") is sentinel
+        finally:
+            engine_lib.register_engine("reference", original)
+        assert isinstance(engine_lib.get_engine("reference"), engine_lib.ReferenceEngine)
+
+
+class TestBitExactness:
+    @pytest.mark.parametrize("name", ENGINES)
+    @pytest.mark.parametrize("b,m,n", RAGGED_SHAPES)
+    def test_vmm_matches_reference(self, name, b, m, n):
+        if name == "custbinarymap" and b * m * n > 2**21:
+            pytest.skip("row-serial sim materializes (b, n, m); keep it small")
+        rng = np.random.default_rng(b * 7 + m + n)
+        a, w = _signs(rng, (b, m)), _signs(rng, (m, n))
+        ref = _as_int(engine_lib.get_engine("reference").binary_vmm(a, w))
+        got = _as_int(engine_lib.get_engine(name).binary_vmm(a, w))
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    def test_vmm_leading_batch_dims(self, name):
+        rng = np.random.default_rng(11)
+        a, w = _signs(rng, (2, 3, 40)), _signs(rng, (40, 9))
+        ref = _as_int(engine_lib.get_engine("reference").binary_vmm(a, w))
+        got = _as_int(engine_lib.get_engine(name).binary_vmm(a, w))
+        assert got.shape == (2, 3, 9)
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    def test_mmm_matches_reference(self, name):
+        rng = np.random.default_rng(5)
+        groups, w = _signs(rng, (3, 4, 50)), _signs(rng, (50, 12))
+        ref = _as_int(engine_lib.get_engine("reference").binary_mmm(groups, w))
+        got = _as_int(engine_lib.get_engine(name).binary_mmm(groups, w))
+        assert got.shape == (3, 4, 12)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_packed_under_jit(self):
+        # the serving path closes over the engine inside jit'd decode
+        rng = np.random.default_rng(3)
+        a, w = _signs(rng, (6, 33)), _signs(rng, (33, 5))
+        eng = engine_lib.get_engine("packed")
+        got = _as_int(jax.jit(eng.binary_vmm)(a, w))
+        np.testing.assert_array_equal(got, _as_int(a @ w))
+
+
+class TestModelParity:
+    """Full forward passes agree across every backend (odd layer widths)."""
+
+    def setup_method(self):
+        self.cfg = model.MLPConfig(dims=(20, 32, 24, 5))
+        self.params = model.init_mlp(jax.random.PRNGKey(0), self.cfg)
+        self.x = jax.random.normal(jax.random.PRNGKey(1), (6, 20))
+
+    @pytest.mark.parametrize("name", [n for n in ENGINES if n != "reference"])
+    def test_mlp_forward_all_engines(self, name):
+        ref = model.mlp_forward_infer(self.params, self.x, self.cfg, "reference")
+        got = model.mlp_forward_infer(self.params, self.x, self.cfg, name)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+    def test_mlp_accepts_engine_instance(self):
+        eng = engine_lib.get_engine("packed")
+        got = model.mlp_forward_infer(self.params, self.x, self.cfg, eng)
+        ref = model.mlp_forward_infer(self.params, self.x, self.cfg, "reference")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+class TestStepCounters:
+    def test_steps_interface(self):
+        m, n, b = 512, 256, 48
+        assert engine_lib.get_engine("reference").steps_for(m, n, b) == b
+        assert engine_lib.get_engine("tacitmap").steps_for(m, n, b) == b
+        assert engine_lib.get_engine("custbinarymap").steps_for(m, n, b) == b * n
+        wdm = engine_lib.get_engine("wdm")
+        assert wdm.steps_for(m, n, b) == -(-b // wdm.spec.wdm_k)
+        assert engine_lib.get_engine("packed").steps_for(m, n, b) == 1
+
+
+class TestLMServingParity:
+    """cfg.bnn_engine routes the binarized LM projections bit-exactly."""
+
+    def _logits(self, engine_name):
+        import dataclasses
+
+        from repro.configs import get_smoke_config
+        from repro.data import lm_batch
+        from repro.models import lm as lm_lib
+
+        cfg = dataclasses.replace(
+            get_smoke_config("tinyllama-1.1b"), quant="bnn", bnn_engine=engine_name
+        )
+        params = lm_lib.init_params(jax.random.key(0), cfg)
+        tokens = lm_batch(cfg, 2, 16, seed=7)["tokens"]
+        logits, _ = lm_lib.prefill(params, tokens, cfg)
+        return np.asarray(logits, np.float32)
+
+    def test_prefill_packed_matches_reference(self):
+        np.testing.assert_allclose(
+            self._logits("packed"), self._logits("reference"), atol=1e-5, rtol=1e-5
+        )
+
+    def test_continuous_batching_packed_matches_reference(self):
+        import dataclasses
+
+        from repro.configs import get_smoke_config
+        from repro.models import lm as lm_lib
+        from repro.serving.engine import Request, ServingEngine
+
+        cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+        params = lm_lib.init_params(jax.random.key(0), cfg)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab_size, (8,), dtype=np.int32) for _ in range(3)]
+
+        def gen(engine_name):
+            se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine=engine_name)
+            for i, p in enumerate(prompts):
+                se.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+            return {r.rid: r.generated for r in se.run_to_completion()}
+
+        assert gen("packed") == gen("reference")
+
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(_ROOT / "src")] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    return env
+
+
+def test_serve_cli_engine_smoke():
+    """`launch/serve.py --engine packed --smoke` runs end-to-end."""
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "tinyllama-1.1b", "--smoke", "--engine", "packed",
+            "--batch", "1", "--prompt-len", "8", "--gen", "2",
+        ],
+        capture_output=True, text=True, timeout=600, cwd=_ROOT, env=_subprocess_env(),
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "engine=packed" in proc.stdout
+
+
+def test_benchmarks_run_help_smoke():
+    """`benchmarks/run.py --help` stays wired (CI gate for the driver)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--help"],
+        capture_output=True, text=True, timeout=120, cwd=_ROOT, env=_subprocess_env(),
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "--sections" in proc.stdout
+
+
+@pytest.mark.tpu
+def test_packed_compiled_on_tpu():
+    """Same kernel, compiled (not interpret) — only runs on a TPU host."""
+    rng = np.random.default_rng(0)
+    a, w = _signs(rng, (128, 512)), _signs(rng, (512, 128))
+    eng = engine_lib.PackedEngine(interpret=False)
+    got = _as_int(eng.binary_vmm(a, w))
+    np.testing.assert_array_equal(got, _as_int(a @ w))

@@ -1,6 +1,7 @@
 """End-to-end behaviour tests: the paper's full pipeline and the
 framework's drivers, exercised through the public entry points."""
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -77,12 +78,17 @@ class TestDrivers:
     """The CLI drivers run end to end (subprocess: clean jax state)."""
 
     def _run(self, args, timeout=420):
+        env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+        # keep the platform pin: CPU containers with libtpu baked in hang
+        # for minutes probing the TPU plugin if JAX_PLATFORMS is dropped
+        if "JAX_PLATFORMS" in os.environ:
+            env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
         out = subprocess.run(
             [sys.executable, "-m", *args],
             capture_output=True,
             text=True,
             cwd=ROOT,
-            env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+            env=env,
             timeout=timeout,
         )
         assert out.returncode == 0, out.stderr[-2000:]
