@@ -90,8 +90,9 @@ def engine_rows(b=64, m=512, n=128, seed=0) -> list[dict]:
     return rows
 
 
-def main() -> int:
-    out = run()
+def main(smoke: bool = False) -> int:
+    # smoke: CI-sized shapes (interpret-mode Pallas on big shapes is slow)
+    out = run(m=128, k=256, n=64) if smoke else run()
     m, k, n = out["shape"]
     print(f"\n== kernel bench: packed XNOR matmul ({m}x{k}x{n}) ==")
     print(f"bit-exact vs ref: {out['bitexact']}")
@@ -101,8 +102,9 @@ def main() -> int:
           f"packed {out['hbm_bytes_packed']/2**20:.1f} MiB "
           f"({out['traffic_reduction']:.0f}x reduction — the paper's 1-bit/cell density)")
 
-    rows = engine_rows()
-    print("\n== engine sweep: registered backends, one ±1 matmul (64x512x128) ==")
+    rows = engine_rows(b=16, m=128, n=32) if smoke else engine_rows()
+    print("\n== engine sweep: registered backends, one ±1 matmul "
+          f"({'16x128x32' if smoke else '64x512x128'}) ==")
     print(f"{'engine':>14s} {'bit-exact':>9s} {'hw steps':>9s} {'cpu_ms':>8s}  hardware")
     for r in rows:
         print(f"{r['engine']:>14s} {str(r['bitexact']):>9s} {r['steps']:>9d} "

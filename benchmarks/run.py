@@ -14,6 +14,12 @@ Sections:
   5. multilevel     — multi-level PCM cells vs noise (§VI-C future work)
   6. dse            — oPCM VCore design-space pareto (§VI-C future work)
   7. roofline       — §Roofline table from dry-run artifacts (if present)
+  8. serving_groups — serving K-group batched decode throughput sweep
+                      (K x engine, measured + modeled)
+
+``--sections engines`` is an alias for the engine-registry gate
+(kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
+CI-sized work.
 """
 
 from __future__ import annotations
@@ -28,7 +34,10 @@ SECTIONS = (
     "multilevel",
     "dse",
     "roofline",
+    "serving_groups",
 )
+
+ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
 
 
 def wdm_sweep() -> int:
@@ -61,19 +70,36 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--sections",
         default="all",
-        help="comma-separated subset of: " + ", ".join(SECTIONS) + " (default: all)",
+        help="comma-separated subset of: " + ", ".join(SECTIONS)
+        + ", or the alias 'engines' (= kernel_bench,serving_groups); default: all",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI-sized work: shrink the kernel/serving sweeps",
     )
     args = ap.parse_args(argv)
     wanted = set(SECTIONS) if args.sections == "all" else {
         s.strip() for s in args.sections.split(",") if s.strip()
     }
+    for alias, expansion in ALIASES.items():
+        if alias in wanted:
+            wanted = (wanted - {alias}) | expansion
     unknown = wanted - set(SECTIONS)
     if unknown:
         ap.error(f"unknown sections: {', '.join(sorted(unknown))}")
 
     import glob
 
-    from benchmarks import dse, kernel_bench, multilevel, paper_energy, paper_latency, roofline
+    from benchmarks import (
+        dse,
+        kernel_bench,
+        multilevel,
+        paper_energy,
+        paper_latency,
+        roofline,
+        serving_groups,
+    )
 
     rc = 0
     if "paper_latency" in wanted:
@@ -81,7 +107,7 @@ def main(argv: list[str] | None = None) -> int:
     if "paper_energy" in wanted:
         rc |= paper_energy.main()
     if "kernel_bench" in wanted:
-        rc |= kernel_bench.main()
+        rc |= kernel_bench.main(smoke=args.smoke)
     if "wdm_sweep" in wanted:
         rc |= wdm_sweep()
     if "multilevel" in wanted:
@@ -93,6 +119,8 @@ def main(argv: list[str] | None = None) -> int:
             rc |= roofline.main()
         else:
             print("\n[roofline] skipped — no runs/dryrun/*.json (run repro.launch.dryrun)")
+    if "serving_groups" in wanted:
+        rc |= serving_groups.main(smoke=args.smoke)
     return rc
 
 

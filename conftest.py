@@ -16,6 +16,12 @@ def pytest_configure(config):
         "CPU run executes all kernels in interpret mode instead, so the "
         "plain `pytest` gate is meaningful on any machine.",
     )
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running (multi-minute training loops, subprocess-spawning "
+        "drivers, forced-multi-device runs). CI's tier1 job deselects these "
+        'with -m "not slow and not tpu"; the nightly full job runs everything.',
+    )
 
 
 def pytest_collection_modifyitems(config, items):

@@ -279,6 +279,77 @@ def network_energy_j(params: CIMParams, net: NetworkDesc) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Grouped serving-decode accounting (WDM K-group batching)
+# ---------------------------------------------------------------------------
+#
+# The serving engine (repro/serving/engine.py) groups each decode
+# tick's active slots into K-groups and issues one ``binary_mmm`` per
+# projection. These helpers report what that tick costs in hardware
+# terms, through the same ``Engine.steps_for`` / binary-energy seams as
+# the per-network numbers above — so EinsteinBarrier's K-way latency
+# division shows up directly in serving-tick numbers (groups =
+# ceil(active / K) crossbar activations instead of `active`).
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedDecodeTick:
+    """Hardware cost of ONE K-grouped serving decode tick through one
+    binary projection layer, vs slot-at-a-time execution."""
+
+    engine: str
+    k: int                # WDM capacity of the design's tile
+    n_active: int         # active serving slots this tick
+    groups: int           # crossbar activations with K-group batching
+    slot_steps: int       # activations decoding one slot at a time
+    speedup: float        # slot_steps / groups (≤ K; < K on ragged ticks)
+    latency_ns: float
+    energy_pj: float
+
+
+def grouped_decode_tick(
+    params: CIMParams, layer: LayerDesc, n_active: int
+) -> GroupedDecodeTick:
+    """Cost one serving tick of ``n_active`` slots through ``layer``."""
+    eng = params.engine()
+    groups = eng.steps_for(layer.m, layer.n, n_active)
+    slot_steps = n_active * eng.steps_for(layer.m, layer.n, 1)
+    t_step = (
+        params.t_row_step_ns if params.mapping == "custbinarymap"
+        else params.tile.t_vmm_ns
+    )
+    tick_params = dataclasses.replace(params, batch=n_active)
+    tick_layer = dataclasses.replace(layer, positions=1)
+    return GroupedDecodeTick(
+        engine=params.engine_name,
+        k=params.k,
+        n_active=n_active,
+        groups=groups,
+        slot_steps=slot_steps,
+        speedup=slot_steps / groups,
+        latency_ns=groups * t_step,
+        energy_pj=_BINARY_ENERGY[params.engine_name](tick_params, tick_layer),
+    )
+
+
+def grouped_decode_sweep(
+    params: CIMParams, layer: LayerDesc, n_active: int, ks: tuple[int, ...]
+) -> list[GroupedDecodeTick]:
+    """``grouped_decode_tick`` across WDM capacities (K sweep): the
+    design's tile is rebound to each K (non-WDM designs are K-invariant
+    — their electrical tiles pin K=1, the serving fallback's vmap'd
+    group — and return identical rows)."""
+    out = []
+    for k in ks:
+        p = params
+        if params.use_wdm:
+            p = dataclasses.replace(
+                params, tile=dataclasses.replace(params.tile, wdm_k=k)
+            )
+        out.append(grouped_decode_tick(p, layer, n_active))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # GPU model
 # ---------------------------------------------------------------------------
 

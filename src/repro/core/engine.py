@@ -13,8 +13,18 @@ An :class:`Engine` executes ±1 binary matmuls::
     binary_vmm(a_signs, w_signs)   # (..., m) x (m, n) -> (..., n)
     binary_mmm(groups, w_signs)    # (G, K, m) x (m, n) -> (G, K, n)
 
-and exposes capability/cost metadata (``info``, ``steps_for``) that the
-analytical cost model and the benchmark sweeps consume uniformly.
+and exposes capability/cost metadata (``info``, ``steps_for``,
+``preferred_group_size``) that the analytical cost model, the serving
+engine's :class:`~repro.serving.engine.BatchPlanner` and the benchmark
+sweeps consume uniformly.
+
+``binary_mmm`` is the batching contract: one call executes G stacked
+K-groups against shared binarized weights. Engines with
+``info.native_mmm`` (WDM) execute each K-group as ONE hardware step —
+``preferred_group_size()`` reports the K the substrate natively
+multiplexes (the wavelength count); every other backend reports 1 and
+serves ``binary_mmm`` through the flattened-VMM fallback (a "vmap'd
+group"), so consumers can group unconditionally.
 
 Capability matrix of the registered backends:
 
@@ -95,6 +105,8 @@ class Engine(Protocol):
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int: ...
 
+    def preferred_group_size(self) -> int: ...
+
 
 class _EngineBase:
     """Shared plumbing: spec binding, MMM-via-VMM fallback, repr."""
@@ -114,6 +126,16 @@ class _EngineBase:
         g, k, m = groups.shape
         out = self.binary_vmm(groups.reshape(g * k, m), w_signs)
         return out.reshape(g, k, -1)
+
+    def preferred_group_size(self) -> int:
+        """K-vectors the substrate executes per hardware step.
+
+        1 for every non-``native_mmm`` backend: grouping still works
+        (``binary_mmm`` flattens), but each vector in the group costs a
+        sequential step — the serving engine treats these as a vmap'd
+        group and picks its own K.
+        """
+        return 1
 
     def with_spec(self, spec: CrossbarSpec) -> "Engine":
         """Same backend rebound to another tile spec (subclasses with
@@ -190,6 +212,10 @@ class WDMEngine(_EngineBase):
         del m, n
         return wdm.steps_for(n_inputs, self.spec.wdm_k)
 
+    def preferred_group_size(self) -> int:
+        """The wavelength count: K input vectors ride one crossbar step."""
+        return self.spec.wdm_k
+
 
 class PackedEngine(_EngineBase):
     """Bit-packed XNOR+popcount Pallas kernel — the TPU-native crossbar step.
@@ -242,6 +268,71 @@ class CustBinaryMapEngine(_EngineBase):
 
 
 # ---------------------------------------------------------------------------
+# K-group batching adapter (WDM-style MMM execution of any backend)
+# ---------------------------------------------------------------------------
+
+
+class GroupedEngine:
+    """Execute a backend's VMMs as K-grouped ``binary_mmm`` calls.
+
+    This is the serving engine's unit-of-work change: a batch of B
+    input vectors becomes G = ceil(B / K) stacked K-groups and issues
+    ONE ``binary_mmm`` registry call (stacked activations, shared
+    binarized weights) instead of B vector calls. Ragged tails are
+    padded with +1 signs — idle comb lines in WDM hardware — and the
+    pad outputs are discarded, so the adapter is bit-exact for any B.
+
+    For ``native_mmm`` backends (WDM) each K-group is one crossbar
+    step; for the rest the group flattens back to a VMM (a vmap'd
+    group), so the adapter composes with every registered engine.
+    """
+
+    def __init__(self, base: Engine, k: int):
+        if k < 1:
+            raise ValueError(f"group size must be >= 1, got {k}")
+        self.base = base
+        self.k = int(k)
+        self.info = base.info
+        self.spec = base.spec
+
+    @property
+    def name(self) -> str:
+        return f"{self.base.name}@k{self.k}"
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        m = a_signs.shape[-1]
+        flat = a_signs.reshape(-1, m)
+        b = flat.shape[0]
+        g = max(1, math.ceil(b / self.k))
+        pad = g * self.k - b
+        if pad:
+            flat = jnp.concatenate(
+                [flat, jnp.ones((pad, m), flat.dtype)], axis=0
+            )
+        out = self.base.binary_mmm(flat.reshape(g, self.k, m), w_signs)
+        out = out.reshape(g * self.k, -1)[:b]
+        return out.reshape(*a_signs.shape[:-1], -1)
+
+    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
+        return self.base.binary_mmm(groups, w_signs)
+
+    def with_spec(self, spec: CrossbarSpec) -> "GroupedEngine":
+        return GroupedEngine(resolve(self.base, spec), self.k)
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        """ceil(B / K) group launches, each costing the base engine a
+        K-vector step (1 for native MMM, K sequential otherwise)."""
+        groups = math.ceil(n_inputs / self.k)
+        return groups * self.base.steps_for(m, n, self.k)
+
+    def preferred_group_size(self) -> int:
+        return self.k
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<GroupedEngine {self.name}>"
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -287,6 +378,22 @@ def resolve(engine: str | Engine, spec: CrossbarSpec | None = None) -> Engine:
 def engine_info(name: str) -> EngineInfo:
     """Capability metadata without instantiating arrays/specs."""
     return get_engine(name).info
+
+
+def resolve_group_size(engine: Engine | None, requested: int | None, batch: int) -> int:
+    """The K-group sizing policy shared by the serving engine and CLIs.
+
+    Explicit request (> 0) wins; else ``native_mmm`` engines contribute
+    their ``preferred_group_size()`` (WDM's wavelength count); else one
+    vmap'd group spans the batch. Always clamped to [1, batch].
+    """
+    if requested:
+        k = requested
+    elif engine is not None and engine.info.native_mmm:
+        k = engine.preferred_group_size()
+    else:
+        k = batch
+    return max(1, min(int(k), batch))
 
 
 for _cls in (

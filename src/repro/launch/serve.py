@@ -14,6 +14,11 @@ cells, so serving on the production mesh is the identical program.
 non-reference engine implies ``quant="bnn"`` (the backends execute the
 binarized ±1 projections — there is nothing for them to run in an fp
 model).
+
+``--group-size`` sets the WDM-style K-group width: every decode tick's
+binarized projections go down as ONE ``binary_mmm`` call of
+ceil(batch/K) stacked K-groups (0 = auto: native-MMM engines use their
+wavelength count, others one vmap'd group spanning the batch).
 """
 
 from __future__ import annotations
@@ -37,6 +42,13 @@ def main() -> int:
         help="execution backend for binarized projections "
         "(see repro.core.engine.list_engines())",
     )
+    ap.add_argument(
+        "--group-size",
+        type=int,
+        default=0,
+        help="WDM K-group width for batched decode (0 = auto from the "
+        "engine's preferred_group_size / batch)",
+    )
     args = ap.parse_args()
 
     import jax
@@ -49,6 +61,7 @@ def main() -> int:
     from repro.models import lm as lm_lib
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    grouped = None
     if args.engine != "reference":
         try:
             eng = engine_lib.get_engine(args.engine)
@@ -56,6 +69,17 @@ def main() -> int:
             ap.error(str(e))
         cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=args.engine)
         print(f"[serve] engine={eng.name} ({eng.info.description})")
+        if cfg.is_encdec:
+            if args.group_size:
+                ap.error("--group-size applies to the decoder-only serving path")
+        else:
+            k = engine_lib.resolve_group_size(eng, args.group_size, args.batch)
+            grouped = engine_lib.GroupedEngine(eng, k)
+            print(f"[serve] K-group batching: K={k}, "
+                  f"{-(-args.batch // k)} group(s)/tick over batch={args.batch}, "
+                  f"idle lanes/tick={-(-args.batch // k) * k - args.batch}")
+    elif args.group_size:
+        ap.error("--group-size requires a non-reference --engine")
     max_len = args.prompt_len + args.gen
     key = jax.random.key(args.seed)
     params = (
@@ -82,7 +106,7 @@ def main() -> int:
     else:
         extra = batch.get("extra_embeds")
         logits, pre_caches = jax.jit(
-            lambda p, t, e: lm_lib.prefill(p, t, cfg, e)
+            lambda p, t, e: lm_lib.prefill(p, t, cfg, e, engine=grouped)
         )(params, tokens, extra)
         caches = lm_lib.init_cache(cfg, args.batch, max_len)
 
@@ -92,7 +116,9 @@ def main() -> int:
             return src.astype(dst.dtype)  # ssm states carry over directly
 
         caches = jax.tree.map(graft, caches, pre_caches)
-        decode = jax.jit(lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg))
+        decode = jax.jit(
+            lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg, engine=grouped)
+        )
     t_prefill = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -112,6 +138,13 @@ def main() -> int:
           f"quant={cfg.quant} engine={cfg.bnn_engine}")
     print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode {args.gen - 1} steps "
           f"{t_decode*1e3:.1f} ms ({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    if grouped is not None and args.gen > 1:
+        ticks = args.gen - 1
+        groups = ticks * -(-args.batch // grouped.k)
+        slot_steps = ticks * args.batch
+        print(f"[serve] batched path: K={grouped.k}, 1 binary_mmm call/projection/tick, "
+              f"{groups} K-groups over {ticks} ticks "
+              f"(vs {slot_steps} slot-at-a-time steps, {slot_steps / groups:.1f}x fewer)")
     print(f"[serve] generated[0,:8] = {gen[0, :8].tolist()}")
     return 0
 

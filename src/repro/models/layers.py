@@ -98,8 +98,15 @@ def infer_engine(cfg: ModelConfig):
 
 def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     """Linear layer; ``quant="bnn"`` routes through the paper's BitLinear:
-    sign-binarized weights/activations (STE in training) with per-tensor
-    fp scales — first/last layers of a model never use it (§II-B).
+    sign-binarized weights/activations (STE in training) with a
+    per-tensor weight scale and a per-token activation scale — first/last
+    layers of a model never use it (§II-B).
+
+    The activation scale is per-token (mean |x| along the feature axis)
+    so every batch row's output depends only on that row: continuous
+    batching and the serving engine's K-group gather (which may repeat
+    rows in ragged tails) are then semantically invisible. A per-tensor
+    activation scale would couple rows through the batch mean.
 
     ``engine`` (a ``repro.core.engine.Engine``) executes the ±1 matmul
     through any registered backend — e.g. the packed XNOR+popcount
@@ -109,7 +116,7 @@ def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     w = p["w"]
     if quant == "bnn":
         alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
-        beta = jnp.mean(jnp.abs(x).astype(jnp.float32))
+        beta = jnp.mean(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True)
         xb = bnn.binarize_ste(x.astype(jnp.float32))
         wb = bnn.binarize_ste(w)
         dot = xb @ wb if engine is None else engine.binary_vmm(xb, wb).astype(jnp.float32)

@@ -220,8 +220,12 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.0
 # ---------------------------------------------------------------------------
 
 
-def _apply_repeat_prefill(h: Array, slot_params: Params, positions: Array, cfg: ModelConfig):
-    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
+def _apply_repeat_prefill(
+    h: Array, slot_params: Params, positions: Array, cfg: ModelConfig, engine=None
+):
+    # binarized projections run on cfg.bnn_engine unless the caller
+    # passes an engine (e.g. the serving engine's K-group adapter)
+    eng = engine if engine is not None else infer_engine(cfg)
     caches = {}
     for i, kind in enumerate(cfg.pattern):
         sp = slot_params[f"slot{i}"]
@@ -245,11 +249,19 @@ def _apply_repeat_prefill(h: Array, slot_params: Params, positions: Array, cfg: 
     return h, caches
 
 
-def prefill(params: Params, tokens: Array, cfg: ModelConfig, extra_embeds: Array | None = None):
+def prefill(
+    params: Params,
+    tokens: Array,
+    cfg: ModelConfig,
+    extra_embeds: Array | None = None,
+    engine=None,
+):
     """Forward pass that also returns stacked per-layer caches and the
     last-position logits. Cache seq capacity == prompt length (callers
     pad to their serving window). ``extra_embeds`` (B, L, d) prepends
-    modality-frontend embeddings (VLM prefill)."""
+    modality-frontend embeddings (VLM prefill). ``engine`` overrides
+    ``cfg.bnn_engine`` for the binarized projections (serving passes its
+    K-group ``GroupedEngine`` here)."""
     embeds = embed_tokens(params, tokens)
     if extra_embeds is not None:
         embeds = jnp.concatenate([extra_embeds.astype(embeds.dtype), embeds], axis=1)
@@ -257,7 +269,7 @@ def prefill(params: Params, tokens: Array, cfg: ModelConfig, extra_embeds: Array
     h = embeds.astype(ACT_DTYPE)
 
     def body(h, slot_p):
-        h2, caches = _apply_repeat_prefill(h, slot_p, positions, cfg)
+        h2, caches = _apply_repeat_prefill(h, slot_p, positions, cfg, engine)
         return h2, caches
 
     h, caches = jax.lax.scan(body, h, params["blocks"])
@@ -288,12 +300,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=ACT_DTYPE) -> P
     return caches
 
 
-def decode_step(params: Params, token: Array, pos: Array, caches: Params, cfg: ModelConfig):
-    """One serving step: token (B,) int32, pos scalar int32, caches from
-    ``init_cache``/``prefill``. Returns (logits (B, V), new_caches)."""
+def decode_step(
+    params: Params, token: Array, pos: Array, caches: Params, cfg: ModelConfig, engine=None
+):
+    """One serving step: token (B,) int32, pos scalar int32 or (B,)
+    per-slot positions, caches from ``init_cache``/``prefill``. Returns
+    (logits (B, V), new_caches). ``engine`` overrides ``cfg.bnn_engine``
+    (the serving engine passes its K-group ``GroupedEngine``)."""
     embeds = embed_tokens(params, token[:, None])  # (B, 1, d)
     h = embeds.astype(ACT_DTYPE)
-    eng = infer_engine(cfg)  # binarized projections run on cfg.bnn_engine
+    eng = engine if engine is not None else infer_engine(cfg)
 
     def body(h, xs):
         slot_p, cache_r = xs

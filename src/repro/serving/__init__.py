@@ -1,3 +1,4 @@
-"""Batched serving engine (continuous batching over a slot cache)."""
+"""Batched serving engine (continuous batching over a slot cache,
+decode ticks grouped into WDM-style K-groups)."""
 
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import BatchPlanner, GroupPlan, Request, ServingEngine

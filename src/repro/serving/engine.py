@@ -1,47 +1,58 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with WDM-style K-group decode.
 
 The paper's accelerator streams independent inference requests through
-resident weights (WDM multiplexes them onto one crossbar pass); the LM
-serving analogue is continuous batching: a fixed pool of KV-cache slots
-that requests join and leave independently, with ONE batched decode
-step per tick regardless of how requests interleave.
+resident weights (WDM multiplexes K of them onto one crossbar pass);
+the LM serving analogue is continuous batching: a fixed pool of
+KV-cache slots that requests join and leave independently, with the
+active slots grouped into K-groups so ONE ``Engine.binary_mmm``
+registry call serves a whole tick.
 
 Design:
 
 * **Slot cache**: caches allocated once at (max_batch, max_len);
   requests claim a free slot, prefill writes their prompt KV into it,
-  decode advances all active slots with per-slot positions
+  decode advances the active slots with per-slot positions
   (``attention_decode_step`` takes a (B,) position vector), finished
-  slots are freed and immediately reusable — no recompilation, no
-  cache reallocation, fixed memory.
+  slots are freed and immediately reusable — no cache reallocation,
+  fixed memory.
+* **K-group batching** (:class:`BatchPlanner`): every tick the planner
+  collects the active slots into groups of up to K and the engine runs
+  one gathered decode over them. Inside the model, the binarized
+  projections execute through a :class:`~repro.core.engine.GroupedEngine`
+  — the whole tick's stacked activations go down as ONE
+  ``binary_mmm(groups, w)`` call instead of one ``binary_vmm`` per
+  slot. K is capability-aware: ``native_mmm`` backends (``wdm``)
+  contribute their wavelength count via ``preferred_group_size()``;
+  every other backend gets one vmap'd group spanning the pool. Ragged
+  tails (active % K != 0) pad the last group by repeating a real slot
+  (an idle comb line); pad lanes are computed and discarded.
+* **Per-slot KV-cache scatter**: gather, decode and the scatter of the
+  group's cache rows back into the resident pool run as ONE fused
+  compiled dispatch per tick. Pad lanes mirror a real slot (identical
+  inputs, bit-identical updates), so the scatter is exact and free
+  slots are never touched.
 * **Greedy decoding** (argmax) — sampling is orthogonal to the engine.
-* **Inactive slots still compute** (SPMD-friendly: the batch shape is
-  static); their outputs are masked. This is the standard accelerator
-  trade: waste a little compute on empty slots, never reshape.
-* The invariant tested in tests/test_serving.py: any interleaving of
-  submissions produces byte-identical generations to running each
-  request alone — continuous batching is semantically invisible.
+* The invariant tested in tests/test_serving.py and
+  tests/test_serving_groups.py: any interleaving of submissions, any
+  group size and any execution backend produce byte-identical
+  generations to running each request alone — continuous batching and
+  K-grouping are semantically invisible.
 
 This engine is CPU/TPU-agnostic pure JAX over the model zoo's
 prefill/decode entry points (decoder-only archs incl. SSM/hybrid).
-
-Binarized models (``cfg.quant == "bnn"``) can serve their hidden
-projections through any execution backend registered in
-``repro.core.engine`` (``engine="packed"`` routes prefill and every
-decode tick through the bit-packed XNOR+popcount Pallas kernel) — all
-backends are bit-exact, so continuous batching stays semantically
-invisible regardless of the backend.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as engine_lib
 from repro.models import lm as lm_lib
 from repro.models.config import ModelConfig
 
@@ -58,6 +69,63 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One tick's unit of work: active slots arranged into K-groups."""
+
+    slots: tuple[int, ...]        # real active slots, in slot order
+    k: int                        # group size (wavelengths per group)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.slots)
+
+    @property
+    def n_groups(self) -> int:
+        """Crossbar MMM activations this tick costs per projection —
+        the decode tick count in hardware-step terms (ceil(active/K))."""
+        return math.ceil(self.n_active / self.k)
+
+    @property
+    def n_lanes(self) -> int:
+        return self.n_groups * self.k
+
+    @property
+    def n_pad(self) -> int:
+        """Idle wavelengths: lanes in the ragged tail carrying no slot."""
+        return self.n_lanes - self.n_active
+
+    def gather_indices(self) -> np.ndarray:
+        """(n_lanes,) slot indices for the gathered decode batch; the
+        ragged tail repeats the last real slot (outputs discarded)."""
+        idx = np.empty((self.n_lanes,), np.int32)
+        idx[: self.n_active] = self.slots
+        idx[self.n_active:] = self.slots[-1]
+        return idx
+
+
+class BatchPlanner:
+    """Collects active slots into WDM-style K-groups each tick.
+
+    The contract (documented in ROADMAP.md §Serving batching): given
+    the set of active slots, produce a :class:`GroupPlan` whose lanes
+    are a static multiple of K — ceil(active/K) groups, ragged tail
+    padded — or ``None`` when nothing is active. The serving engine
+    issues one gathered decode per plan; a future multi-device serving
+    path shards *groups* (not slots) across devices from the same plan.
+    """
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"group size must be >= 1, got {k}")
+        self.k = int(k)
+
+    def plan(self, active_slots: list[int]) -> GroupPlan | None:
+        if not active_slots:
+            return None
+        return GroupPlan(slots=tuple(sorted(active_slots)), k=self.k)
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -67,11 +135,11 @@ class ServingEngine:
         max_batch: int = 4,
         max_len: int = 256,
         engine: str | None = None,
+        group_size: int | None = None,
     ):
+        base_engine: engine_lib.Engine | None = None
         if engine is not None and engine != "reference":
-            from repro.core import engine as engine_lib
-
-            engine_lib.get_engine(engine)  # validate the name eagerly
+            base_engine = engine_lib.get_engine(engine)  # validates eagerly
             # a non-reference engine executes the binarized projections,
             # so it implies quant="bnn" (same contract as launch/serve.py
             # --engine); without this the flag would be a silent no-op
@@ -80,6 +148,25 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+
+        # K-group sizing: explicit > engine capability > one vmap'd group
+        self.group_k = engine_lib.resolve_group_size(base_engine, group_size, max_batch)
+        self.planner = BatchPlanner(self.group_k)
+        self._exec = (
+            engine_lib.GroupedEngine(base_engine, self.group_k)
+            if base_engine is not None
+            else None
+        )
+        self.stats = {
+            "ticks": 0,           # gathered decode launches
+            "decoded": 0,         # real slot-tokens decoded (slot-at-a-time steps)
+            "mmm_groups": 0,      # K-groups issued to a registry backend
+                                  # (crossbar MMM steps/projection; 0 when
+                                  # the plain-jnp path executes instead)
+            "pad_lanes": 0,       # idle wavelengths from ragged tails
+            "prefills": 0,
+        }
+
         self.caches = lm_lib.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)        # next write position
         self.tok = np.zeros((max_batch,), np.int32)        # last emitted token
@@ -87,10 +174,35 @@ class ServingEngine:
         self.queue: list[Request] = []
 
         self._prefill = jax.jit(
-            lambda p, t: lm_lib.prefill(p, t, cfg), static_argnums=()
+            lambda p, t: lm_lib.prefill(p, t, cfg, engine=self._exec)
         )
-        self._decode = jax.jit(
-            lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg)
+
+        def gathered_decode(p, tok, pos, caches, idx):
+            # gather -> decode -> per-slot scatter, fused into ONE
+            # compiled dispatch per tick (specializes on the lane count:
+            # at most ceil(max_batch/K) distinct shapes, reused
+            # steady-state). Pad lanes mirror a real slot and therefore
+            # compute bit-identical updates, so scattering every lane is
+            # exact; slots outside `idx` are never touched.
+            gathered = jax.tree.map(lambda c: jnp.take(c, idx, axis=1), caches)
+            logits, new_c = lm_lib.decode_step(
+                p, tok[idx], pos[idx], gathered, cfg, engine=self._exec
+            )
+            caches = jax.tree.map(
+                lambda dst, src: dst.at[:, idx].set(src.astype(dst.dtype)),
+                caches,
+                new_c,
+            )
+            return logits, caches
+
+        self._decode = jax.jit(gathered_decode)
+        # identity-plan fast path: with the whole pool active and no pad
+        # lanes the gather/scatter is the identity — skip the two
+        # O(pool * max_len) cache copies and decode in place
+        self._decode_full = jax.jit(
+            lambda p, tok, pos, c: lm_lib.decode_step(
+                p, tok, pos, c, cfg, engine=self._exec
+            )
         )
 
     # -- client API ---------------------------------------------------------
@@ -126,27 +238,50 @@ class ServingEngine:
             self.slot_req[slot] = req
             self.pos[slot] = len(req.prompt)
             self.tok[slot] = first
+            self.stats["prefills"] += 1
 
     def step(self) -> list[Request]:
-        """Admit queued requests, run one batched decode tick; returns
-        requests that finished this tick."""
+        """Admit queued requests, run one K-grouped decode tick over the
+        active slots; returns requests that finished this tick."""
         self._admit()
-        if all(r is None for r in self.slot_req):
+        active = [s for s in range(self.max_batch) if self.slot_req[s] is not None]
+        plan = self.planner.plan(active)
+        if plan is None:
             return []
-        logits, self.caches = self._decode(
-            self.params,
-            jnp.asarray(self.tok),
-            jnp.asarray(self.pos),
-            self.caches,
-        )
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        # one fused dispatch: gather the plan's lanes (active slots +
+        # ragged-tail repeats), decode, scatter the KV rows back; with
+        # the whole pool active the plan is the identity and the decode
+        # runs in place
+        if plan.n_active == self.max_batch and plan.n_pad == 0:
+            logits, self.caches = self._decode_full(
+                self.params, jnp.asarray(self.tok), jnp.asarray(self.pos), self.caches
+            )
+        else:
+            logits, self.caches = self._decode(
+                self.params,
+                jnp.asarray(self.tok),
+                jnp.asarray(self.pos),
+                self.caches,
+                jnp.asarray(plan.gather_indices()),
+            )
+        n = plan.n_active
+        self.stats["ticks"] += 1
+        self.stats["decoded"] += plan.n_active
+        # K-groups actually issued to a registry backend; the plain-jnp
+        # path (no engine) executes no binary_mmm, so its reduction is
+        # not reported as a measurement
+        if self._exec is not None:
+            self.stats["mmm_groups"] += plan.n_groups
+        self.stats["pad_lanes"] += plan.n_pad
+
+        nxt = np.asarray(jnp.argmax(logits[:n], axis=-1), np.int32)
         finished = []
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            req.generated.append(int(nxt[slot]))
+        for lane, slot in enumerate(plan.slots):
+            req = self.slot_req[slot]
+            req.generated.append(int(nxt[lane]))
             self.pos[slot] += 1
-            self.tok[slot] = nxt[slot]
+            self.tok[slot] = nxt[lane]
             out_of_budget = len(req.generated) >= req.max_new_tokens
             out_of_cache = self.pos[slot] + 1 >= self.max_len
             if out_of_budget or out_of_cache:
@@ -158,9 +293,27 @@ class ServingEngine:
         return finished
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        """Drain queue + slots; raises on ``max_ticks`` exhaustion.
+
+        The idle check runs *after* each tick (a tick both admits and
+        decodes), so requests submitted after a previous drain — or
+        mid-run between ticks — are picked up rather than spinning; and
+        exhaustion raises with the stuck requests named instead of
+        silently returning partial results.
+        """
         out = []
         for _ in range(max_ticks):
+            if self.idle():
+                return out
             out += self.step()
             if self.idle():
                 return out
-        raise RuntimeError("serving engine did not drain")
+        stuck = [r.rid for r in self.queue] + [
+            r.rid for r in self.slot_req if r is not None
+        ]
+        raise RuntimeError(
+            f"serving engine did not drain after {max_ticks} ticks; "
+            f"undrained request ids: {stuck} "
+            f"(queued={len(self.queue)}, active="
+            f"{sum(r is not None for r in self.slot_req)})"
+        )

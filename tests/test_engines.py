@@ -203,6 +203,7 @@ def _subprocess_env():
     return env
 
 
+@pytest.mark.slow
 def test_serve_cli_engine_smoke():
     """`launch/serve.py --engine packed --smoke` runs end-to-end."""
     proc = subprocess.run(
@@ -217,8 +218,11 @@ def test_serve_cli_engine_smoke():
     assert "engine=packed" in proc.stdout
 
 
+@pytest.mark.slow
 def test_benchmarks_run_help_smoke():
-    """`benchmarks/run.py --help` stays wired (CI gate for the driver)."""
+    """`benchmarks/run.py --help` stays wired (CI gate for the driver —
+    the workflow also runs `--sections engines --smoke` as its own step,
+    so benchmark code can't silently rot)."""
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--help"],
         capture_output=True, text=True, timeout=120, cwd=_ROOT, env=_subprocess_env(),

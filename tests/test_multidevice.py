@@ -11,6 +11,10 @@ from pathlib import Path
 
 import pytest
 
+# every test spawns a subprocess with 8 forced host devices (minutes
+# each on CPU): nightly/full CI only (the tier1 job deselects `slow`)
+pytestmark = pytest.mark.slow
+
 ROOT = Path(__file__).parent.parent
 
 

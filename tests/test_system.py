@@ -17,6 +17,10 @@ from repro.core.networks import NETWORKS
 from repro.data import bnn_image_batch
 from repro.optim import OptConfig, adamw_init, adamw_update
 
+# multi-minute training loops + subprocess CLI drivers: nightly/full CI
+# only (the tier1 job deselects `slow`)
+pytestmark = pytest.mark.slow
+
 ROOT = Path(__file__).parent.parent
 
 
