@@ -17,9 +17,14 @@ Sections:
   8. serving_groups — serving K-group batched decode throughput sweep
                       (K x engine, measured + modeled)
 
+  9. mapping        — mapping-compiler sweep: allocator policy x engine
+                      (plan pricing, tiled parity, serving round-trip)
+
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
-CI-sized work.
+CI-sized work. ``--out PATH`` writes the structured section results as
+JSON (sections that only print report their exit code), so CI keeps the
+perf trajectory as an artifact.
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ SECTIONS = (
     "dse",
     "roofline",
     "serving_groups",
+    "mapping",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -78,6 +84,13 @@ def main(argv: list[str] | None = None) -> int:
         action="store_true",
         help="CI-sized work: shrink the kernel/serving sweeps",
     )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="PATH",
+        help="write section results as JSON (e.g. BENCH_mapping.json) — "
+        "structured rows where a section provides them, exit codes otherwise",
+    )
     args = ap.parse_args(argv)
     wanted = set(SECTIONS) if args.sections == "all" else {
         s.strip() for s in args.sections.split(",") if s.strip()
@@ -90,10 +103,12 @@ def main(argv: list[str] | None = None) -> int:
         ap.error(f"unknown sections: {', '.join(sorted(unknown))}")
 
     import glob
+    import json
 
     from benchmarks import (
         dse,
         kernel_bench,
+        mapping,
         multilevel,
         paper_energy,
         paper_latency,
@@ -102,25 +117,40 @@ def main(argv: list[str] | None = None) -> int:
     )
 
     rc = 0
+    results: dict[str, dict] = {}
+
+    def record(section: str, section_rc: int, payload: dict | None = None) -> int:
+        results[section] = dict(payload or {}, rc=section_rc)
+        return section_rc
+
     if "paper_latency" in wanted:
-        rc |= paper_latency.main()
+        rc |= record("paper_latency", paper_latency.main())
     if "paper_energy" in wanted:
-        rc |= paper_energy.main()
+        rc |= record("paper_energy", paper_energy.main())
     if "kernel_bench" in wanted:
-        rc |= kernel_bench.main(smoke=args.smoke)
+        rc |= record("kernel_bench", kernel_bench.main(smoke=args.smoke))
     if "wdm_sweep" in wanted:
-        rc |= wdm_sweep()
+        rc |= record("wdm_sweep", wdm_sweep())
     if "multilevel" in wanted:
-        rc |= multilevel.main()
+        rc |= record("multilevel", multilevel.main())
     if "dse" in wanted:
-        rc |= dse.main()
+        rc |= record("dse", dse.main())
     if "roofline" in wanted:
         if glob.glob("runs/dryrun/*.json"):
-            rc |= roofline.main()
+            rc |= record("roofline", roofline.main())
         else:
             print("\n[roofline] skipped — no runs/dryrun/*.json (run repro.launch.dryrun)")
     if "serving_groups" in wanted:
-        rc |= serving_groups.main(smoke=args.smoke)
+        rc |= record("serving_groups", serving_groups.main(smoke=args.smoke))
+    if "mapping" in wanted:
+        m_rc, payload = mapping.run(smoke=args.smoke)
+        rc |= record("mapping", m_rc, payload)
+
+    if args.out:
+        doc = {"smoke": args.smoke, "rc": rc, "sections": results}
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, default=str)
+        print(f"\n[run] wrote section results to {args.out}")
     return rc
 
 

@@ -136,8 +136,13 @@ BASELINE_GPU = GPUParams()
 # ---------------------------------------------------------------------------
 
 
-def _position_stream(params: CIMParams, layer: LayerDesc) -> int:
-    """Sequential input-vector slots for one batch, after replication."""
+def position_stream(params: CIMParams, layer: LayerDesc) -> int:
+    """Sequential input-vector slots for one batch, after replication.
+
+    Public: the mapping scheduler (repro/mapping/schedule.py) charges
+    plans through this same convention so plan numbers and the
+    paper-figure numbers agree (conv layers replicate weights across
+    spare tiles; FC layers do not)."""
     if layer.positions > 1:  # conv: replicate weights across spare tiles
         repl = params.conv_replication if layer.binary else params.edge_conv_replication
         par = min(repl, layer.positions)
@@ -155,7 +160,7 @@ def layer_steps(params: CIMParams, layer: LayerDesc) -> int:
     live behind that one interface); edge (hi-res) layers run the shared
     bit-serial policy below.
     """
-    stream = _position_stream(params, layer)
+    stream = position_stream(params, layer)
     if layer.binary:
         return params.engine().steps_for(layer.m, layer.n, stream)
     if params.use_wdm:  # WDM groups the stream K vectors per step
@@ -347,6 +352,107 @@ def grouped_decode_sweep(
             )
         out.append(grouped_decode_tick(p, layer, n_active))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Mapping-plan pricing (repro/mapping compilation artifacts)
+# ---------------------------------------------------------------------------
+#
+# The mapping compiler (repro/mapping) turns a model into an explicit
+# MappingPlan — which tile holds which weight block, under which policy.
+# price_plan() is the costmodel's direct entry point for those plans:
+# binary layers are charged through the plan's own schedule (which sees
+# tile-budget serialization the implicit per-network numbers above
+# cannot), hi-res edge layers through the shared edge policy.
+
+
+def params_for_spec(spec: CrossbarSpec) -> CIMParams:
+    """The CIM design a tile spec implies: ePCM tiles price as
+    TacitMap-ePCM, oPCM tiles as EinsteinBarrier (WDM iff K > 1)."""
+    if spec.technology == "oPCM":
+        return dataclasses.replace(
+            EINSTEINBARRIER, tile=spec, use_wdm=spec.wdm_k > 1
+        )
+    return dataclasses.replace(TACITMAP_EPCM, tile=spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """What one MappingPlan costs end to end on its implied design."""
+
+    model: str
+    policy: str
+    design: str
+    batch: int
+    n_tiles: int          # physical tiles the plan provisions
+    utilization: float    # active cells / provisioned cells (>1 = shared)
+    binary_steps: int     # sequential crossbar activations, batch stream
+    latency_s: float      # per inference (batch latency / batch)
+    energy_j: float       # per inference
+    layers: tuple[dict, ...]  # per-IR-entry aggregate rows
+
+
+def price_plan(plan, params: CIMParams | None = None, batch: int | None = None) -> PlanCost:
+    """Price a :class:`repro.mapping.allocator.MappingPlan` directly.
+
+    Binary layers go through the plan's schedule (tile phases, WDM
+    grouping, registered energy counters); non-binary edge layers run
+    the shared hi-res policy. Returns per-inference latency/energy plus
+    per-layer aggregates, so benchmark sweeps and serve-time reports
+    price policies without re-deriving any counters.
+    """
+    from repro.mapping import schedule as schedule_lib  # mapping imports costmodel
+
+    params = params or params_for_spec(plan.spec)
+    if batch is not None:
+        params = dataclasses.replace(params, batch=batch)
+    sch = schedule_lib.schedule(plan, params=params)
+
+    # aggregate instance rows back to IR entries for readable reports
+    agg: dict[str, dict] = {}
+    for lp, ls in zip(plan.layers, sch.layers):
+        row = agg.setdefault(
+            lp.ir.name,
+            {"layer": lp.ir.name, "m": lp.ir.m, "n": lp.ir.n, "instances": 0,
+             "blocks": 0, "steps_per_vector": 0, "steps": 0,
+             "latency_ns": 0.0, "energy_pj": 0.0},
+        )
+        row["instances"] += 1
+        row["blocks"] += ls.n_blocks
+        row["steps_per_vector"] = max(row["steps_per_vector"], ls.steps_per_vector)
+        row["steps"] += ls.steps
+        row["latency_ns"] += ls.latency_ns
+        row["energy_pj"] += ls.energy_pj
+
+    total_ns = sch.total_latency_ns
+    total_pj = sch.total_energy_pj
+    for ir in plan.model.layers:
+        if ir.binary:
+            continue
+        desc = ir.to_layer_desc()
+        e_ns = ir.count * layer_latency_ns(params, desc)
+        e_pj = ir.count * layer_energy_pj(params, desc)
+        total_ns += e_ns
+        total_pj += e_pj
+        agg[ir.name] = {
+            "layer": ir.name, "m": ir.m, "n": ir.n, "instances": ir.count,
+            "blocks": 0, "steps_per_vector": 0,
+            "steps": ir.count * layer_steps(params, desc),
+            "latency_ns": e_ns, "energy_pj": e_pj,
+        }
+
+    return PlanCost(
+        model=plan.model.name,
+        policy=plan.policy,
+        design=params.name,
+        batch=params.batch,
+        n_tiles=plan.n_tiles,
+        utilization=plan.utilization(),
+        binary_steps=sch.total_steps,
+        latency_s=total_ns * 1e-9 / params.batch,
+        energy_j=total_pj * 1e-12 / params.batch,
+        layers=tuple(agg.values()),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ name                  models                                   native MMM
 ``tacitmap``          tiled ePCM/oPCM crossbar simulator       no
 ``wdm``               oPCM + K-wavelength WDM (EinsteinBarrier) yes (K)
 ``packed``            TPU bit-packed XNOR+popcount Pallas       no
+``tiled``             mapping-plan sharded tile execution       no
 ``custbinarymap``     2T2R/PCSA row-serial baseline [15]        no
 ====================  =======================================  ==========
 
@@ -251,6 +252,134 @@ class PackedEngine(_EngineBase):
         return 1
 
 
+class TiledEngine(_EngineBase):
+    """Mapping-plan-driven sharded tile execution.
+
+    Where ``tacitmap`` simulates the whole tiled array in one einsum,
+    this backend executes the *compiled placement*: operands are sliced
+    into exactly the ``spec.rows x spec.cols`` blocks a
+    :class:`repro.mapping.allocator.MappingPlan` placed, the per-block
+    partial popcounts run as ONE vmap over the tile axis (in the plan's
+    block order), and digital partial-sum accumulation scatters them
+    back per output column group. Bit-exact vs ``reference`` for every
+    allocator policy — placement permutes tile order, never the math.
+
+    The tile axis is the sharding axis: under an active
+    ``activation_hints`` mesh the stacked tiles and their partials are
+    constrained to the ``model`` axis, so a multi-device run splits the
+    plan's tile pool across devices (the ROADMAP's "sharded-crossbar
+    tiles" backend).
+
+    Construction: ``get_engine("tiled", plan=plan)`` executes per a
+    compiled plan (and inherits its tile spec); without a plan, each
+    distinct (m, n) weight shape is placed on the fly under ``policy``
+    and cached on the engine instance.
+    """
+
+    info = EngineInfo(
+        name="tiled",
+        description="plan-driven sharded tile execution (complement blocks, vmap over tiles)",
+        hardware="ePCM/oPCM crossbar tile pool; tile axis shards over a jax mesh",
+    )
+
+    def __init__(self, spec: CrossbarSpec | None = None, *, plan=None, policy: str = "tacitmap"):
+        if plan is not None and spec is None:
+            spec = plan.spec
+        super().__init__(spec)
+        if plan is not None and plan.spec != self.spec:
+            raise ValueError(
+                f"plan was compiled for {plan.spec.technology} "
+                f"{plan.spec.rows}x{plan.spec.cols} tiles but the engine is "
+                f"bound to {self.spec.technology} {self.spec.rows}x{self.spec.cols}"
+            )
+        self.plan = plan
+        self.policy = policy
+        self._adhoc_cache: dict[tuple[int, int], object] = {}
+
+    def with_spec(self, spec: CrossbarSpec) -> "TiledEngine":
+        keep = self.plan if (self.plan is not None and self.plan.spec == spec) else None
+        return type(self)(spec, plan=keep, policy=self.policy)
+
+    def _placement(self, m: int, n: int):
+        """The plan's LayerPlan for a (m, n) matrix, or an on-the-fly
+        single-layer placement under this engine's policy (cached)."""
+        if self.plan is not None:
+            lp = self.plan.layer_for(m, n)
+            if lp is not None:
+                return lp
+        lp = self._adhoc_cache.get((m, n))
+        if lp is None:
+            from repro.mapping import allocator, ir  # lazy: mapping imports costmodel
+
+            lp = allocator.allocate(
+                ir.adhoc_layer(m, n), spec=self.spec, policy=self.policy
+            ).layers[0]
+            self._adhoc_cache[(m, n)] = lp
+        return lp
+
+    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+        import numpy as np
+
+        from repro.core.crossbar import adc_quantize
+        from repro.distributed.hints import hint
+
+        m, n = w_signs.shape
+        lp = self._placement(m, n)
+        spec, grid = self.spec, lp.grid
+        R, C = spec.rows, spec.cols
+        RT, CT = grid.row_tiles, grid.col_tiles
+
+        order = lp.block_order()
+        block_ids = np.asarray([rb * CT + cb for rb, cb in order], np.int32)
+        row_ids = np.asarray([rb for rb, _ in order], np.int32)
+        col_ids = np.asarray([cb for _, cb in order], np.int32)
+
+        # weights: complement-stack, pad to the tile grid, gather the
+        # blocks in the PLAN'S placement order (the policy's layout)
+        stacked = bnn.stack_complement_weights(bnn.signs_to_bits(w_signs))
+        padded = jnp.pad(stacked, ((0, RT * R - 2 * m), (0, CT * C - n)))
+        blocks = padded.reshape(RT, R, CT, C).transpose(0, 2, 1, 3).reshape(RT * CT, R, C)
+        tiles = jnp.take(blocks, block_ids, axis=0).astype(jnp.float32)
+        tiles = hint(tiles, "model")  # shard the tile axis when a mesh is active
+
+        # inputs: complement drive, cut into the row blocks each tile sees
+        drive = bnn.concat_complement_input(bnn.signs_to_bits(a_signs))
+        drive = jnp.pad(drive, [(0, 0)] * (drive.ndim - 1) + [(0, RT * R - 2 * m)])
+        drive = drive.reshape(*drive.shape[:-1], RT, R)
+        drive_t = jnp.moveaxis(jnp.take(drive, row_ids, axis=-2), -2, 0)  # (T, ..., R)
+
+        def one_tile(tile: Array, drv: Array) -> Array:
+            # one crossbar activation: analog MAC + that tile's ADC
+            pc = jnp.einsum("...r,rc->...c", drv.astype(jnp.float32), tile)
+            return adc_quantize(pc, spec, active_rows=R)
+
+        partial = jax.vmap(one_tile)(tiles, drive_t)  # (T, ..., C)
+        partial = hint(partial, "model")
+        # digital partial-sum accumulation: row-block partials of each
+        # output column group add up, in whatever order the plan placed them
+        summed = jax.ops.segment_sum(partial, jnp.asarray(col_ids), num_segments=CT)
+        out = jnp.moveaxis(summed, 0, -2)  # (..., CT, C)
+        pc = out.reshape(*out.shape[:-2], CT * C)[..., :n]
+        return 2 * pc - m
+
+    def steps_for(self, m: int, n: int, n_inputs: int) -> int:
+        """WDM-grouped stream x the plan's per-vector serialization (a
+        tile co-hosting j blocks of one layer fires j times)."""
+        lp = self._placement(m, n)
+        groups = math.ceil(n_inputs / max(1, self.spec.wdm_k))
+        return groups * lp.steps_per_vector
+
+    def preferred_group_size(self) -> int:
+        """The plan's WDM capacity (== spec.wdm_k for the bound tiles)."""
+        if self.plan is not None:
+            return self.plan.preferred_group_size()
+        return self.spec.wdm_k
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        planned = self.plan.model.name if self.plan is not None else f"adhoc/{self.policy}"
+        return f"<Engine tiled spec={self.spec.technology} plan={planned}>"
+
+
 class CustBinaryMapEngine(_EngineBase):
     """The SotA baseline mapping [15]: one weight vector per step (PCSA)."""
 
@@ -380,16 +509,24 @@ def engine_info(name: str) -> EngineInfo:
     return get_engine(name).info
 
 
-def resolve_group_size(engine: Engine | None, requested: int | None, batch: int) -> int:
+def resolve_group_size(
+    engine: Engine | None, requested: int | None, batch: int, plan=None
+) -> int:
     """The K-group sizing policy shared by the serving engine and CLIs.
 
-    Explicit request (> 0) wins; else ``native_mmm`` engines contribute
-    their ``preferred_group_size()`` (WDM's wavelength count); else one
+    Explicit request (> 0) wins; else a compiled mapping plan
+    contributes its WDM capacity (``plan.preferred_group_size()`` — the
+    static mapping artifact knows the placed tile technology even when
+    the executing backend has no native MMM); else any engine whose
+    ``preferred_group_size()`` exceeds 1 contributes it (WDM's
+    wavelength count, a plan-bound tiled engine's tile K); else one
     vmap'd group spans the batch. Always clamped to [1, batch].
     """
     if requested:
         k = requested
-    elif engine is not None and engine.info.native_mmm:
+    elif plan is not None and plan.preferred_group_size() > 1:
+        k = plan.preferred_group_size()
+    elif engine is not None and engine.preferred_group_size() > 1:
         k = engine.preferred_group_size()
     else:
         k = batch
@@ -401,6 +538,7 @@ for _cls in (
     TacitMapEngine,
     WDMEngine,
     PackedEngine,
+    TiledEngine,
     CustBinaryMapEngine,
 ):
     register_engine(_cls.info.name, _cls)

@@ -17,8 +17,17 @@ model).
 
 ``--group-size`` sets the WDM-style K-group width: every decode tick's
 binarized projections go down as ONE ``binary_mmm`` call of
-ceil(batch/K) stacked K-groups (0 = auto: native-MMM engines use their
-wavelength count, others one vmap'd group spanning the batch).
+ceil(batch/K) stacked K-groups (0 = auto: a compiled mapping plan's WDM
+capacity first, then native-MMM engines' wavelength count, else one
+vmap'd group spanning the batch).
+
+``--mapping-policy`` (with ``--engine tiled``) compiles the arch's
+binarized projections into an explicit layer->tile MappingPlan
+(``repro.mapping``), prints the placement summary + cost-model pricing,
+and executes the ±1 matmuls per that placement:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --smoke --engine tiled --mapping-policy greedy
 """
 
 from __future__ import annotations
@@ -28,7 +37,10 @@ import dataclasses
 import time
 
 
-def main() -> int:
+def main(argv: list[str] | None = None) -> int:
+    from repro.core import engine as engine_lib
+    from repro.mapping import POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -39,41 +51,68 @@ def main() -> int:
     ap.add_argument(
         "--engine",
         default="reference",
+        # argparse-time validation: a typo'd backend fails here with the
+        # registered names listed, not deep in engine construction
+        choices=engine_lib.list_engines(),
         help="execution backend for binarized projections "
-        "(see repro.core.engine.list_engines())",
+        "(registered in repro.core.engine)",
     )
     ap.add_argument(
         "--group-size",
         type=int,
         default=0,
         help="WDM K-group width for batched decode (0 = auto from the "
-        "engine's preferred_group_size / batch)",
+        "mapping plan / engine's preferred_group_size / batch)",
     )
-    args = ap.parse_args()
+    ap.add_argument(
+        "--mapping-policy",
+        default=None,
+        choices=POLICIES,
+        help="compile a layer->tile MappingPlan under this allocator "
+        "policy and execute per it (requires --engine tiled)",
+    )
+    args = ap.parse_args(argv)
+    if args.mapping_policy is not None and args.engine != "tiled":
+        ap.error("--mapping-policy places weights for the plan-driven "
+                 "'tiled' engine; pass --engine tiled with it")
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_smoke_config
-    from repro.core import engine as engine_lib
     from repro.data import lm_batch
     from repro.models import encdec as encdec_lib
     from repro.models import lm as lm_lib
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     grouped = None
+    plan = None
     if args.engine != "reference":
-        try:
-            eng = engine_lib.get_engine(args.engine)
-        except ValueError as e:
-            ap.error(str(e))
+        engine_kw = {}
+        if args.engine == "tiled":
+            from repro.core import costmodel
+            from repro.mapping import compile_plan, report
+
+            policy = args.mapping_policy or cfg.mapping_policy
+            cfg = dataclasses.replace(cfg, mapping_policy=policy)
+            if cfg.is_encdec:
+                ap.error("--engine tiled: mapping plans cover the "
+                         "decoder-only LM projection stack")
+            plan = compile_plan(cfg, policy=policy)
+            cost = costmodel.price_plan(plan)
+            print(report.summarize(plan))
+            print(f"[serve] plan priced on {cost.design}: "
+                  f"{cost.latency_s * 1e6:.2f} us/inf, "
+                  f"{cost.energy_j * 1e6:.3f} uJ/inf")
+            engine_kw = {"plan": plan, "policy": policy}
+        eng = engine_lib.get_engine(args.engine, **engine_kw)
         cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=args.engine)
         print(f"[serve] engine={eng.name} ({eng.info.description})")
         if cfg.is_encdec:
             if args.group_size:
                 ap.error("--group-size applies to the decoder-only serving path")
         else:
-            k = engine_lib.resolve_group_size(eng, args.group_size, args.batch)
+            k = engine_lib.resolve_group_size(eng, args.group_size, args.batch, plan=plan)
             grouped = engine_lib.GroupedEngine(eng, k)
             print(f"[serve] K-group batching: K={k}, "
                   f"{-(-args.batch // k)} group(s)/tick over batch={args.batch}, "

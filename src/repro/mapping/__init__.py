@@ -1,0 +1,80 @@
+"""Mapping compiler: model -> explicit layer-to-tile placement plan.
+
+The paper's core contribution is a *data mapping* — TacitMap decides how
+binarized layers land on crossbar tiles and (with WDM) wavelengths.
+This package makes that decision an explicit, static compilation
+artifact instead of an implicit convention baked into each engine:
+
+* :mod:`repro.mapping.ir`        — the layer IR (``LayerIR``/``ModelIR``)
+  extracted from a ``ModelConfig`` (LM projection stacks, scan repeats
+  expanded) or a paper ``NetworkDesc`` (MLP/CNN workloads).
+* :mod:`repro.mapping.allocator` — the placement planner: complement-row
+  TacitMap layout cut into ``CrossbarSpec`` tiles and assigned to a
+  physical tile pool under a policy (``tacitmap`` | ``column-major`` |
+  ``greedy`` load balancing), with WDM wavelength sets recorded per
+  layer. Produces a :class:`~repro.mapping.allocator.MappingPlan`.
+* :mod:`repro.mapping.schedule`  — orders per-tick tile activations into
+  parallel phases and prices each layer via ``repro.core.costmodel``.
+* :mod:`repro.mapping.report`    — human-readable plan/pricing reports.
+
+Consumers: the ``tiled`` execution engine (``repro.core.engine``) slices
+operands per the plan's block order; the serving engine's BatchPlanner
+consults ``plan.preferred_group_size()``; ``launch/serve.py
+--mapping-policy`` compiles a plan at startup; ``costmodel.price_plan``
+prices one directly; ``benchmarks/run.py --sections mapping`` sweeps
+policy x engine.
+
+Worked example
+--------------
+
+Compile qwen1.5-0.5b onto oPCM tiles, schedule it, price it, and run the
+binarized matmuls through the plan-driven ``tiled`` engine::
+
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.crossbar import OPCM_TILE
+    from repro.core.engine import get_engine
+    from repro.mapping import allocate, report, schedule
+
+    plan = allocate(get_config("qwen1.5-0.5b"), spec=OPCM_TILE,
+                    policy="greedy", tile_budget=4096)
+    sch = schedule.schedule(plan)          # tile phases + step counts
+    # (or: from repro.mapping import schedule_plan; sch = schedule_plan(plan))
+    cost = costmodel.price_plan(plan)      # latency/energy per inference
+    print(report.summarize(plan))          # tiles/util/K/balance one-liner
+    print(report.format_priced(cost))
+
+    eng = get_engine("tiled", plan=plan)   # executes per the placement
+    out = eng.binary_vmm(a_signs, w_signs) # bit-exact vs "reference"
+
+    # serving consults the plan's WDM capacity for K-group decode:
+    #   ServingEngine(cfg, params, engine="tiled", mapping_plan=plan)
+"""
+
+from repro.mapping.allocator import (  # noqa: F401
+    POLICIES,
+    BlockPlacement,
+    LayerPlan,
+    MappingPlan,
+    allocate,
+    balance_ratio,
+    required_tiles,
+)
+from repro.mapping.ir import (  # noqa: F401
+    LayerIR,
+    ModelIR,
+    adhoc_layer,
+    from_model_config,
+    from_network_desc,
+    to_ir,
+)
+from repro.mapping import report  # noqa: F401
+from repro.mapping import schedule as _schedule_mod
+from repro.mapping.schedule import LayerSchedule, Schedule  # noqa: F401
+
+# compile_plan is the one-call public entry point consumers use;
+# schedule_plan orders+prices a compiled plan (the submodule stays
+# reachable as repro.mapping.schedule — the function is NOT re-exported
+# under the same name to avoid shadowing it)
+compile_plan = allocate
+schedule_plan = _schedule_mod.schedule

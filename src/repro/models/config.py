@@ -61,6 +61,12 @@ class ModelConfig:
     # differentiable matmul; "packed" routes through the Pallas
     # XNOR+popcount kernel). Training always uses "reference".
     bnn_engine: str = "reference"
+    # layer->tile placement policy for the "tiled" engine (see
+    # repro.mapping.POLICIES). Consumers that hold a compiled
+    # MappingPlan pass it alongside the config (plans are arrays-free
+    # but not config-hashable); the policy string here is what the
+    # engine falls back to for on-the-fly placement.
+    mapping_policy: str = "tacitmap"
     # misc
     rope_theta: float = 10_000.0
     norm_eps: float = 1e-5

@@ -81,18 +81,28 @@ def _rms_norm_bwd(eps: float, res, g):
 rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
 
 
-def infer_engine(cfg: ModelConfig):
+def infer_engine(cfg: ModelConfig, plan=None):
     """Resolve ``cfg.bnn_engine`` into an execution backend for the
     binarized projections of the *inference* paths (prefill/decode).
 
     Returns ``None`` for the reference backend: the plain matmul below
     is both the reference numerics and the only differentiable (STE)
     path, so training always goes through it.
+
+    ``plan`` (a ``repro.mapping.allocator.MappingPlan``) binds the
+    ``tiled`` backend to a compiled layer->tile placement; without one
+    the engine places each projection on the fly under
+    ``cfg.mapping_policy``. Other backends ignore the plan (their layout
+    is implicit in the backend itself).
     """
     if cfg.quant != "bnn" or cfg.bnn_engine in ("", "reference"):
         return None
     from repro.core import engine as engine_lib
 
+    if cfg.bnn_engine == "tiled":
+        return engine_lib.get_engine(
+            "tiled", plan=plan, policy=cfg.mapping_policy or "tacitmap"
+        )
     return engine_lib.get_engine(cfg.bnn_engine)
 
 

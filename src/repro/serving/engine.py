@@ -21,9 +21,12 @@ Design:
   projections execute through a :class:`~repro.core.engine.GroupedEngine`
   — the whole tick's stacked activations go down as ONE
   ``binary_mmm(groups, w)`` call instead of one ``binary_vmm`` per
-  slot. K is capability-aware: ``native_mmm`` backends (``wdm``)
-  contribute their wavelength count via ``preferred_group_size()``;
-  every other backend gets one vmap'd group spanning the pool. Ragged
+  slot. K is capability-aware: a compiled ``repro.mapping`` plan passed
+  as ``mapping_plan=`` contributes its ``preferred_group_size()`` (the
+  placed tile technology's WDM capacity) first; else ``native_mmm``
+  backends (``wdm``) contribute their wavelength count via
+  ``preferred_group_size()``; every other backend gets one vmap'd group
+  spanning the pool. Ragged
   tails (active % K != 0) pad the last group by repeating a real slot
   (an idle comb line); pad lanes are computed and discarded.
 * **Per-slot KV-cache scatter**: gather, decode and the scatter of the
@@ -136,10 +139,17 @@ class ServingEngine:
         max_len: int = 256,
         engine: str | None = None,
         group_size: int | None = None,
+        mapping_plan=None,
     ):
         base_engine: engine_lib.Engine | None = None
         if engine is not None and engine != "reference":
-            base_engine = engine_lib.get_engine(engine)  # validates eagerly
+            kw = {}
+            if engine == "tiled":
+                # the tiled backend executes per a compiled layer->tile
+                # placement; serving binds the plan (or falls back to
+                # on-the-fly placement under the config's policy)
+                kw = {"plan": mapping_plan, "policy": cfg.mapping_policy or "tacitmap"}
+            base_engine = engine_lib.get_engine(engine, **kw)  # validates eagerly
             # a non-reference engine executes the binarized projections,
             # so it implies quant="bnn" (same contract as launch/serve.py
             # --engine); without this the flag would be a silent no-op
@@ -148,9 +158,14 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.mapping_plan = mapping_plan
 
-        # K-group sizing: explicit > engine capability > one vmap'd group
-        self.group_k = engine_lib.resolve_group_size(base_engine, group_size, max_batch)
+        # K-group sizing: explicit > mapping plan's WDM capacity >
+        # engine capability > one vmap'd group (one policy for every
+        # consumer: engine_lib.resolve_group_size)
+        self.group_k = engine_lib.resolve_group_size(
+            base_engine, group_size, max_batch, plan=mapping_plan
+        )
         self.planner = BatchPlanner(self.group_k)
         self._exec = (
             engine_lib.GroupedEngine(base_engine, self.group_k)

@@ -137,6 +137,42 @@ class TestModelParity:
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
 
 
+class TestTiledPolicies:
+    """The plan-driven ``tiled`` backend is bit-exact for EVERY allocator
+    policy — placement permutes tile order, never the math — including
+    over-subscribed plans (tile budget < block count)."""
+
+    POLICIES = ("tacitmap", "column-major", "greedy")
+
+    def _operands(self, b=7, m=300, n=70):
+        rng = np.random.default_rng(21)
+        return _signs(rng, (b, m)), _signs(rng, (m, n))
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_policy_bit_exact_adhoc(self, policy):
+        a, w = self._operands()
+        ref = _as_int(engine_lib.get_engine("reference").binary_vmm(a, w))
+        eng = engine_lib.get_engine("tiled", policy=policy)
+        np.testing.assert_array_equal(_as_int(eng.binary_vmm(a, w)), ref)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_policy_bit_exact_with_budgeted_plan(self, policy):
+        from repro.mapping import adhoc_layer, allocate
+
+        a, w = self._operands()
+        m, n = w.shape
+        plan = allocate(adhoc_layer(m, n), spec=CrossbarSpec(rows=128, cols=32),
+                        policy=policy, tile_budget=3)
+        eng = engine_lib.get_engine("tiled", plan=plan)
+        ref = _as_int(engine_lib.get_engine("reference").binary_vmm(a, w))
+        np.testing.assert_array_equal(_as_int(eng.binary_vmm(a, w)), ref)
+
+    def test_grouped_adapter_composes(self):
+        a, w = self._operands(b=5)
+        grouped = engine_lib.GroupedEngine(engine_lib.get_engine("tiled"), 2)
+        np.testing.assert_array_equal(_as_int(grouped.binary_vmm(a, w)), _as_int(a @ w))
+
+
 class TestStepCounters:
     def test_steps_interface(self):
         m, n, b = 512, 256, 48
@@ -146,6 +182,21 @@ class TestStepCounters:
         wdm = engine_lib.get_engine("wdm")
         assert wdm.steps_for(m, n, b) == -(-b // wdm.spec.wdm_k)
         assert engine_lib.get_engine("packed").steps_for(m, n, b) == 1
+        # tiled, dedicated tiles on the default ePCM spec (K=1): one
+        # crossbar pass per input vector, like tacitmap
+        assert engine_lib.get_engine("tiled").steps_for(m, n, b) == b
+
+    def test_tiled_steps_with_oversubscribed_plan(self):
+        from repro.core.crossbar import OPCM_TILE
+        from repro.mapping import adhoc_layer, allocate
+
+        m, n = 513, 129  # 5 blocks on 256x256 oPCM tiles
+        plan = allocate(adhoc_layer(m, n), spec=OPCM_TILE, tile_budget=2)
+        eng = engine_lib.get_engine("tiled", plan=plan)
+        spv = plan.layers[0].steps_per_vector
+        assert spv == 3  # ceil(5 blocks / 2 tiles)
+        # K=16 wavelengths group the stream; co-residency serializes
+        assert eng.steps_for(m, n, 48) == -(-48 // 16) * spv
 
 
 class TestLMServingParity:

@@ -1,0 +1,342 @@
+"""Mapping compiler subsystem: IR extraction, tile allocation under every
+policy, schedule/cost round-trip, and the plan-consuming integrations
+(tiled engine, serving BatchPlanner, costmodel pricing).
+
+The acceptance contract: a MappingPlan for qwen1.5-0.5b round-trips
+allocate -> schedule -> costmodel pricing, and placement is a *complete
+partition* of every binarized matrix — each weight block placed exactly
+once, under any policy, with the math untouched (bit-exactness lives in
+tests/test_engines.py; here we check the artifact itself).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import costmodel
+from repro.core import engine as engine_lib
+from repro.core.crossbar import EPCM_TILE, OPCM_TILE, CrossbarSpec
+from repro.core.networks import NETWORKS
+from repro.mapping import (
+    POLICIES,
+    allocate,
+    adhoc_layer,
+    balance_ratio,
+    compile_plan,
+    from_model_config,
+    from_network_desc,
+    report,
+    required_tiles,
+    schedule_plan,
+    to_ir,
+)
+
+QWEN = get_config("qwen1.5-0.5b")
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+
+class TestIR:
+    def test_model_config_extracts_binarized_projections(self):
+        ir = from_model_config(QWEN)
+        names = {l.name for l in ir.layers}
+        assert names == {
+            "slot0.attn.q", "slot0.attn.k", "slot0.attn.v", "slot0.attn.o",
+            "slot0.ffn.w1", "slot0.ffn.w3", "slot0.ffn.w2",
+        }
+        q = ir.layer("slot0.attn.q")
+        assert (q.m, q.n, q.count) == (QWEN.d_model, QWEN.n_heads * QWEN.hd, QWEN.n_repeats)
+        w2 = ir.layer("slot0.ffn.w2")
+        assert (w2.m, w2.n) == (QWEN.d_ff, QWEN.d_model)
+
+    def test_network_desc_ir_keeps_edge_layers(self):
+        net = NETWORKS["CNN-S"]
+        ir = from_network_desc(net)
+        assert len(ir.layers) == len(net.layers)
+        assert sum(l.binary for l in ir.layers) == sum(l.binary for l in net.layers)
+        # edge layers survive in the IR but are not placed (checked below)
+        assert not ir.layer("conv1").binary
+
+    def test_to_ir_dispatch_and_errors(self):
+        assert to_ir(QWEN).source == "model_config"
+        assert to_ir(NETWORKS["MLP-S"]).source == "network_desc"
+        ir = adhoc_layer(100, 30)
+        assert to_ir(ir) is ir
+        with pytest.raises(TypeError):
+            to_ir(42)
+
+    def test_network_desc_round_trip_macs(self):
+        net = NETWORKS["CNN-M"]
+        assert from_network_desc(net).to_network_desc().macs == net.macs
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+class TestAllocator:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_placement_is_complete_partition(self, policy):
+        """Every (row_block, col_block) of every instance appears exactly
+        once; geometry covers the full complement-stacked matrix."""
+        plan = allocate(QWEN, spec=OPCM_TILE, policy=policy)
+        for lp in plan.layers:
+            grid = lp.grid
+            seen = lp.block_order()
+            assert len(seen) == len(set(seen)) == grid.row_tiles * grid.col_tiles
+            rows = sum(b.rows_used for b in lp.blocks if b.col_block == 0)
+            cols = sum(b.cols_used for b in lp.blocks if b.row_block == 0)
+            assert rows == 2 * lp.ir.m  # complement-row layout
+            assert cols == lp.ir.n
+
+    def test_counts_expand_to_instances(self):
+        plan = allocate(QWEN, spec=OPCM_TILE)
+        assert len(plan.layers) == 7 * QWEN.n_repeats
+        assert len(plan.instances("slot0.ffn.w1")) == QWEN.n_repeats
+
+    def test_dedicated_tiles_no_budget(self):
+        plan = allocate(QWEN, spec=OPCM_TILE)
+        assert plan.n_tiles == plan.n_blocks == required_tiles(QWEN, OPCM_TILE)
+        assert all(lp.steps_per_vector == 1 for lp in plan.layers)
+        assert plan.utilization() <= 1.0
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_budget_caps_pool_and_serializes(self, policy):
+        plan = allocate(QWEN, spec=EPCM_TILE, policy=policy, tile_budget=64)
+        assert plan.n_tiles == 64
+        assert max(b.tile for lp in plan.layers for b in lp.blocks) < 64
+        # 9408 blocks on 64 tiles MUST co-schedule same-layer blocks
+        assert max(lp.steps_per_vector for lp in plan.layers) > 1
+        assert plan.utilization() > 1.0  # over-subscription is visible
+
+    def test_greedy_balances_ragged_blocks(self):
+        """On a workload with ragged blocks, LPT is no worse balanced
+        than naive striping."""
+        net = NETWORKS["CNN-M"]
+        budget = 48
+        striped = allocate(net, spec=EPCM_TILE, policy="tacitmap", tile_budget=budget)
+        greedy = allocate(net, spec=EPCM_TILE, policy="greedy", tile_budget=budget)
+        assert balance_ratio(greedy) <= balance_ratio(striped) + 1e-9
+
+    def test_column_major_orders_blocks_by_column(self):
+        plan = allocate(adhoc_layer(513, 300), spec=EPCM_TILE, policy="column-major")
+        order = plan.layers[0].block_order()
+        # all row blocks of col 0 come before any of col 1
+        assert order[: plan.layers[0].grid.row_tiles] == tuple(
+            (rb, 0) for rb in range(plan.layers[0].grid.row_tiles)
+        )
+
+    def test_edge_layers_not_placed(self):
+        plan = allocate(NETWORKS["CNN-S"], spec=EPCM_TILE)
+        placed = {lp.ir.name for lp in plan.layers}
+        assert "conv1" not in placed and "fc3" not in placed
+        assert "conv2" in placed
+
+    def test_wdm_wavelengths_and_group_size(self):
+        plan = allocate(QWEN, spec=OPCM_TILE)
+        assert plan.preferred_group_size() == OPCM_TILE.wdm_k == 16
+        assert plan.layers[0].wavelengths == tuple(range(16))
+        assert allocate(QWEN, spec=EPCM_TILE).preferred_group_size() == 1
+
+    def test_unknown_policy_and_bad_budget_raise(self):
+        with pytest.raises(ValueError, match="unknown mapping policy"):
+            allocate(QWEN, policy="fastest")
+        with pytest.raises(ValueError, match="tile_budget"):
+            allocate(QWEN, tile_budget=0)
+
+
+# ---------------------------------------------------------------------------
+# Schedule + cost round-trip (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+class TestScheduleAndPricing:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_qwen_round_trip_allocate_schedule_price(self, policy):
+        plan = allocate(QWEN, spec=OPCM_TILE, policy=policy)
+        sch = schedule_plan(plan)
+        assert len(sch.layers) == len(plan.layers)
+        for lp, ls in zip(plan.layers, sch.layers):
+            assert ls.steps_per_vector == lp.steps_per_vector
+            # every tile the plan placed appears in the phase ordering
+            assert sorted(t for ph in ls.phases for t in ph) == sorted(
+                b.tile for b in lp.blocks
+            )
+        cost = costmodel.price_plan(plan)
+        assert cost.design == "EinsteinBarrier"  # oPCM + K=16 implies WDM
+        assert cost.latency_s > 0 and cost.energy_j > 0
+        assert cost.binary_steps == sch.total_steps
+
+    def test_wdm_grouping_divides_steps(self):
+        opcm = schedule_plan(allocate(QWEN, spec=OPCM_TILE))
+        epcm = schedule_plan(allocate(QWEN, spec=EPCM_TILE))
+        # same placement geometry; K=16 divides the batch-16 stream
+        assert epcm.total_steps == 16 * opcm.total_steps
+
+    def test_budget_serialization_shows_in_latency(self):
+        free = costmodel.price_plan(allocate(QWEN, spec=OPCM_TILE))
+        tight = costmodel.price_plan(
+            allocate(QWEN, spec=OPCM_TILE, tile_budget=64)
+        )
+        assert tight.latency_s > free.latency_s
+        # energy counts activations, which serialization reorders but
+        # does not add
+        assert tight.energy_j == pytest.approx(free.energy_j)
+
+    def test_schedule_follows_costmodel_stream_convention(self):
+        """Plan steps agree with costmodel.layer_steps on conv workloads
+        (weight replication across spare tiles): plan numbers and the
+        paper-figure numbers share one stream convention."""
+        net = NETWORKS["CNN-M"]
+        plan = allocate(net, spec=EPCM_TILE)
+        sch = schedule_plan(plan)
+        p = costmodel.params_for_spec(EPCM_TILE)
+        for lp, ls in zip(plan.layers, sch.layers):
+            expect = costmodel.layer_steps(p, lp.ir.to_layer_desc())
+            assert ls.steps == expect * ls.steps_per_vector
+
+    def test_resolve_group_size_honors_plan_and_tiled_engine(self):
+        """One policy, one function: explicit > plan K > engine K > batch."""
+        plan = allocate(adhoc_layer(64, 64), spec=OPCM_TILE)
+        tiled = engine_lib.get_engine("tiled", plan=plan)
+        # plan (or the plan-bound engine) contributes K=16
+        assert engine_lib.resolve_group_size(None, None, 32, plan=plan) == 16
+        assert engine_lib.resolve_group_size(tiled, None, 32) == 16
+        # explicit wins; batch clamps; plain engines fall to the pool
+        assert engine_lib.resolve_group_size(tiled, 4, 32, plan=plan) == 4
+        assert engine_lib.resolve_group_size(tiled, None, 8, plan=plan) == 8
+        assert engine_lib.resolve_group_size(engine_lib.get_engine("packed"), None, 32) == 32
+
+    def test_price_plan_includes_edge_layers(self):
+        net = NETWORKS["CNN-S"]
+        cost = costmodel.price_plan(allocate(net, spec=EPCM_TILE))
+        names = {r["layer"] for r in cost.layers}
+        assert "conv1" in names and "conv2" in names
+
+    def test_params_for_spec(self):
+        assert costmodel.params_for_spec(EPCM_TILE).name == "TacitMap-ePCM"
+        p = costmodel.params_for_spec(OPCM_TILE)
+        assert p.name == "EinsteinBarrier" and p.use_wdm
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+class TestReport:
+    def test_report_names_every_layer_or_elides(self):
+        plan = allocate(NETWORKS["MLP-S"], spec=EPCM_TILE)
+        text = report.format_plan(plan, schedule_plan(plan))
+        for lp in plan.layers:
+            assert lp.name in text
+        assert "total:" in text
+
+    def test_large_plan_elides(self):
+        plan = allocate(QWEN, spec=OPCM_TILE)
+        text = report.format_plan(plan, max_rows=10)
+        assert "more layer instances" in text
+
+    def test_summary_line(self):
+        plan = allocate(QWEN, spec=OPCM_TILE, policy="greedy", tile_budget=128)
+        s = report.summarize(plan)
+        assert "policy=greedy" in s and "K=16" in s and "budget=128" in s
+
+    def test_format_priced(self):
+        cost = costmodel.price_plan(allocate(QWEN, spec=OPCM_TILE))
+        text = report.format_priced(cost)
+        assert "slot0.ffn.w1" in text and "EinsteinBarrier" in text
+
+
+# ---------------------------------------------------------------------------
+# Integrations: tiled engine binding, serving BatchPlanner, layers
+# ---------------------------------------------------------------------------
+
+
+class TestIntegrations:
+    def test_tiled_engine_consumes_plan_placement(self):
+        rng = np.random.default_rng(3)
+        m, n = 300, 70
+        a = rng.choice(np.array([-1.0, 1.0], np.float32), size=(5, m))
+        w = rng.choice(np.array([-1.0, 1.0], np.float32), size=(m, n))
+        ref = np.asarray(engine_lib.get_engine("reference").binary_vmm(a, w))
+        for policy in POLICIES:
+            plan = allocate(adhoc_layer(m, n), spec=OPCM_TILE,
+                            policy=policy, tile_budget=3)
+            eng = engine_lib.get_engine("tiled", plan=plan)
+            np.testing.assert_array_equal(np.asarray(eng.binary_vmm(a, w)), ref)
+            lp = plan.layers[0]
+            assert eng.steps_for(m, n, 16) == lp.steps_per_vector  # K=16 -> 1 group
+            assert eng.preferred_group_size() == 16
+
+    def test_tiled_engine_rejects_mismatched_spec(self):
+        plan = allocate(adhoc_layer(64, 64), spec=OPCM_TILE)
+        with pytest.raises(ValueError, match="compiled for"):
+            engine_lib.get_engine("tiled", spec=CrossbarSpec(rows=64, cols=64), plan=plan)
+
+    def test_serving_planner_consults_plan_group_size(self):
+        cfg = dataclasses.replace(get_smoke_config("qwen1.5-0.5b"), quant="bnn")
+        plan = allocate(cfg, spec=OPCM_TILE)
+        import jax
+
+        from repro.models import lm as lm_lib
+        from repro.serving import ServingEngine
+
+        params = lm_lib.init_params(jax.random.key(0), cfg)
+        se = ServingEngine(cfg, params, max_batch=32, max_len=16,
+                           engine="tiled", mapping_plan=plan)
+        # plan's WDM capacity (16) beats the vmap'd-pool fallback (32)
+        assert se.group_k == 16
+        # explicit request still wins
+        se2 = ServingEngine(cfg, params, max_batch=32, max_len=16,
+                            engine="tiled", mapping_plan=plan, group_size=4)
+        assert se2.group_k == 4
+
+    def test_infer_engine_binds_plan_and_policy(self):
+        from repro.models.layers import infer_engine
+
+        cfg = dataclasses.replace(
+            get_smoke_config("qwen1.5-0.5b"), quant="bnn",
+            bnn_engine="tiled", mapping_policy="greedy",
+        )
+        plan = allocate(cfg, spec=EPCM_TILE)
+        eng = infer_engine(cfg, plan=plan)
+        assert eng.plan is plan
+        eng2 = infer_engine(cfg)
+        assert eng2.plan is None and eng2.policy == "greedy"
+
+    def test_tiled_engine_exact_under_mesh_sharding_hints(self):
+        """With an active activation_hints mesh, the tile axis carries a
+        model-axis sharding constraint; execution stays bit-exact (on 1
+        CPU device the constraint is a layout no-op — the lowering path
+        is what this exercises)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.distributed.hints import activation_hints
+        from jax.sharding import Mesh
+
+        rng = np.random.default_rng(9)
+        m, n = 513, 40  # 5 blocks -> tile axis length 5
+        a = jnp.asarray(rng.choice(np.array([-1.0, 1.0], np.float32), size=(4, m)))
+        w = jnp.asarray(rng.choice(np.array([-1.0, 1.0], np.float32), size=(m, n)))
+        eng = engine_lib.get_engine("tiled")
+        mesh = Mesh(np.array(jax.devices("cpu")[:1]), ("model",))
+        with activation_hints(mesh):
+            got = jax.jit(eng.binary_vmm)(a, w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(a @ w))
+
+    def test_plan_survives_grouped_engine_spec_rebind(self):
+        plan = allocate(adhoc_layer(64, 64), spec=OPCM_TILE)
+        eng = engine_lib.get_engine("tiled", plan=plan)
+        grouped = engine_lib.GroupedEngine(eng, 4)
+        rebound = grouped.with_spec(OPCM_TILE)
+        assert rebound.base.plan is plan  # same spec keeps the plan
+        dropped = eng.with_spec(EPCM_TILE)
+        assert dropped.plan is None  # different spec cannot reuse geometry

@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.multilevel import (
     dequantize,
@@ -43,3 +44,57 @@ def test_error_monotone_in_noise_and_depth():
     assert e_b[0] == 0.0 and e_b[0] <= e_b[1] <= e_b[2]
     at_05 = [level_error_rate(b, 0.05) for b in (1, 2, 4)]
     assert at_05[0] <= at_05[1] <= at_05[2]
+
+
+# ---------------------------------------------------------------------------
+# Quantize/dequantize round-trip + exact (noise-free) VMM — the paths the
+# noisy Monte-Carlo study builds on, exercised directly per cell depth.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_quantize_dequantize_roundtrip(bits):
+    """dequantize(quantize(w)) lands within half a level of w, and the
+    level code round-trips exactly (quantize is dequantize's left
+    inverse on the level lattice)."""
+    w = jnp.linspace(-1.0, 1.0, 101)
+    q = quantize_weights(w, bits)
+    back = dequantize(q, bits)
+    levels = 2**bits - 1
+    # reconstruction error bounded by half a level spacing (2/levels)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1.0 / levels + 1e-6)
+    # lattice fixpoint: re-quantizing the reconstruction is the identity
+    np.testing.assert_array_equal(np.asarray(quantize_weights(back, bits)), np.asarray(q))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_quantize_clips_out_of_range(bits):
+    w = jnp.array([-5.0, 5.0])
+    q = np.asarray(quantize_weights(w, bits))
+    assert q.tolist() == [0, 2**bits - 1]
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_exact_vmm_matches_float_matmul(bits):
+    """multilevel_vmm_exact on integer levels IS the float matmul of the
+    level codes — the crossbar ideal the noisy path degrades from."""
+    import jax
+
+    levels = 2**bits - 1
+    k1, k2 = jax.random.split(jax.random.key(bits), 2)
+    a = jax.random.randint(k1, (9, 33), 0, levels + 1)
+    w = jax.random.randint(k2, (33, 17), 0, levels + 1)
+    got = np.asarray(multilevel_vmm_exact(a, w))
+    ref = np.asarray(a, np.float32) @ np.asarray(w, np.float32)
+    np.testing.assert_array_equal(got, ref)
+    # and the dequantized product relates by the level scaling: the
+    # (2q/L - 1) affine maps the integer MAC onto the real-valued one
+    aw_real = np.asarray(dequantize(a, bits)) @ np.asarray(dequantize(w, bits))
+    m = a.shape[-1]
+    sum_a = np.asarray(a, np.float64).sum(-1)
+    sum_w = np.asarray(w, np.float64).sum(0)
+    recovered = (
+        4 * got - 2 * levels * sum_a[:, None] - 2 * levels * sum_w[None, :]
+        + m * levels * levels
+    ) / (levels * levels)
+    np.testing.assert_allclose(recovered, aw_real, rtol=1e-5, atol=1e-5)
