@@ -19,6 +19,9 @@ Sections:
 
   9. mapping        — mapping-compiler sweep: allocator policy x engine
                       (plan pricing, tiled parity, serving round-trip)
+ 10. serving_latency — prepared-vs-unprepared decode tick wall time per
+                      engine x K + modeled one-time programming cost
+                      (the serving-latency perf-trajectory point)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -41,6 +44,7 @@ SECTIONS = (
     "roofline",
     "serving_groups",
     "mapping",
+    "serving_latency",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -114,6 +118,7 @@ def main(argv: list[str] | None = None) -> int:
         paper_latency,
         roofline,
         serving_groups,
+        serving_latency,
     )
 
     rc = 0
@@ -145,6 +150,9 @@ def main(argv: list[str] | None = None) -> int:
     if "mapping" in wanted:
         m_rc, payload = mapping.run(smoke=args.smoke)
         rc |= record("mapping", m_rc, payload)
+    if "serving_latency" in wanted:
+        s_rc, payload = serving_latency.run(smoke=args.smoke)
+        rc |= record("serving_latency", s_rc, payload)
 
     if args.out:
         doc = {"smoke": args.smoke, "rc": rc, "sections": results}

@@ -1,0 +1,198 @@
+"""Serving decode-tick latency — prepared vs unprepared weights, per
+engine × K. The first *measured serving latency* point in the perf
+trajectory (``BENCH_serving.json``): the PR ≤ 3 artifacts recorded only
+mapping sweeps.
+
+Two views of the PR-4 prepared-weights contract:
+
+* **Measured**: two ``ServingEngine`` runs per (engine, K) on the smoke
+  LM — one with the crossbar-programming phase (default: weights are
+  compiled into the backend's resident form once, decode streams only
+  activations) and one with ``prepare_weights=False`` (the PR-3
+  behaviour: every tick re-runs ``map_weights`` / bit-packing / block
+  gathers per projection inside the decode graph). Reports the median
+  decode-tick wall time over a full, steady slot pool plus the one-time
+  programming wall time. The gate asserts prepared ticks are strictly
+  faster for ``packed``/``wdm``/``tiled`` and that both paths decode
+  bit-identical tokens.
+* **Modeled**: the cost model's one-time programming-energy term (PCM
+  write, ``costmodel.layer_programming_cost``) against the per-tick
+  readout energy — the break-even tick count after which the
+  stationary-weight premise has paid for its write.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+GATE_ENGINES = ("packed", "wdm", "tiled")
+
+
+def _timed_step(se) -> float:
+    t0 = time.perf_counter()
+    se.step()
+    return time.perf_counter() - t0
+
+
+def measured_sweep(engines, ks, *, max_batch, prompt_len, warmup, ticks):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_lib
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, (prompt_len,), dtype=np.int32)
+        for _ in range(max_batch)
+    ]
+    budget = warmup + ticks + 2  # slots stay active through the window
+
+    rows = []
+    for name in engines:
+        for k in ks:
+            row = {"engine": name, "k": k}
+            # both paths built up-front and their decode ticks timed
+            # INTERLEAVED (prep, raw, prep, raw, ...): the structural
+            # delta is the per-tick weight-side work, and interleaving
+            # cancels machine drift that sequential phases would alias
+            # into the comparison
+            pair = {}
+            for prepared in (True, False):
+                se = ServingEngine(
+                    cfg, params,
+                    max_batch=max_batch,
+                    max_len=prompt_len + budget + 2,
+                    engine=name,
+                    group_size=k,
+                    prepare_weights=prepared,
+                )
+                for i, p in enumerate(prompts):
+                    se.submit(Request(rid=i, prompt=p, max_new_tokens=budget))
+                # first steps admit+prefill+compile; excluded from timing
+                for _ in range(warmup):
+                    se.step()
+                pair["prepared" if prepared else "raw"] = se
+            times: dict[str, list[float]] = {"prepared": [], "raw": []}
+            for _ in range(ticks):
+                times["prepared"].append(_timed_step(pair["prepared"]))
+                times["raw"].append(_timed_step(pair["raw"]))
+            for label, se in pair.items():
+                row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
+            # the robust statistic: each (prepared, raw) tick pair is
+            # adjacent in time, so the per-pair difference cancels drift
+            # and a noise spike only perturbs one pair — the gate pools
+            # these deltas per engine
+            row["paired_deltas_ms"] = [
+                (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
+            ]
+            row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
+            row["programmed"] = pair["prepared"].stats["programmed"]
+            row["program_ms"] = pair["prepared"].stats["program_s"] * 1e3
+            # same admission order both runs: compare per-slot streams
+            gens = {
+                label: {
+                    slot: tuple(r.generated)
+                    for slot, r in enumerate(se.slot_req)
+                    if r is not None
+                }
+                for label, se in pair.items()
+            }
+            row["speedup"] = row["tick_ms_raw"] / max(row["tick_ms_prepared"], 1e-9)
+            row["exact"] = gens["prepared"] == gens["raw"] and bool(gens["prepared"])
+            rows.append(row)
+    return rows
+
+
+def modeled_programming():
+    from repro.core import costmodel as cm
+    from repro.core.networks import LayerDesc
+
+    layer = LayerDesc(name="fc", m=512, n=512, positions=1, binary=True)
+    out = []
+    for p in (cm.EINSTEINBARRIER, cm.TACITMAP_EPCM):
+        prog = cm.layer_programming_cost(p, layer)
+        tick = cm.grouped_decode_tick(p, layer, n_active=16)
+        out.append({
+            "design": p.name,
+            "cells": prog.cells,
+            "program_uJ": prog.energy_pj * 1e-6,
+            "program_us": prog.time_ns * 1e-3,
+            "tick_energy_pJ": tick.energy_pj,
+            "break_even_ticks": cm.programming_break_even_ticks(p, layer, 16),
+        })
+    return layer, out
+
+
+def run(smoke: bool = False) -> tuple[int, dict]:
+    if smoke:
+        engines = GATE_ENGINES
+        ks = (1, 4)
+        sizes = dict(max_batch=4, prompt_len=5, warmup=3, ticks=20)
+    else:
+        engines = GATE_ENGINES + ("tacitmap",)
+        ks = (1, 2, 4)
+        sizes = dict(max_batch=4, prompt_len=6, warmup=3, ticks=32)
+
+    rows = measured_sweep(engines, ks, **sizes)
+
+    print("\n== serving decode-tick latency: prepared vs raw weights "
+          f"(smoke LM, batch={sizes['max_batch']}, median of {sizes['ticks']} "
+          "interleaved tick pairs) ==")
+    print(f"{'engine':>10s} {'K':>3s} {'prepared_ms':>12s} {'raw_ms':>9s} "
+          f"{'speedup':>8s} {'pair_d_ms':>10s} {'exact':>6s} {'program_ms':>11s}")
+    for r in rows:
+        print(f"{r['engine']:>10s} {r['k']:3d} {r['tick_ms_prepared']:12.2f} "
+              f"{r['tick_ms_raw']:9.2f} {r['speedup']:7.2f}x "
+              f"{r['paired_delta_ms']:10.3f} {str(r['exact']):>6s} "
+              f"{r['program_ms']:11.1f}")
+
+    exact = all(r["exact"] for r in rows)
+    # acceptance gate, per ENGINE: pool the interleaved per-tick deltas
+    # across that engine's K rows — prepared must be strictly faster
+    deltas = {}
+    for r in rows:
+        if r["engine"] in GATE_ENGINES:
+            deltas.setdefault(r["engine"], []).extend(r["paired_deltas_ms"])
+    per_engine = {e: statistics.median(d) for e, d in deltas.items()}
+    faster = all(d > 0 for d in per_engine.values())
+    print("per-engine pooled median tick delta (raw - prepared, ms): "
+          + "  ".join(f"{e}={d:+.3f}" for e, d in per_engine.items()))
+    print(f"prepared strictly faster on {'/'.join(GATE_ENGINES)}: {faster}; "
+          f"bit-exact prepared vs raw: {exact}")
+    print("(raw re-runs the weight-side transforms inside every decode tick; "
+          "prepared programs them once at engine bind — the CIM premise)")
+
+    layer, modeled = modeled_programming()
+    print(f"\n== modeled one-time programming vs per-tick readout "
+          f"({layer.m}x{layer.n} FC, 16 active slots) ==")
+    print(f"{'design':>16s} {'cells':>8s} {'write_uJ':>9s} {'write_us':>9s} "
+          f"{'tick_pJ':>9s} {'break-even':>11s}")
+    for m in modeled:
+        print(f"{m['design']:>16s} {m['cells']:8d} {m['program_uJ']:9.2f} "
+              f"{m['program_us']:9.1f} {m['tick_energy_pJ']:9.1f} "
+              f"{m['break_even_ticks']:9.0f}t")
+    print("(PCM writes cost ~10^4 reads; the write amortizes over the decode "
+          "stream — the prepared-weights contract is that amortization in software)")
+
+    rc = 0 if (exact and faster) else 1
+    payload = {
+        "measured": rows,
+        "modeled": {"layer": {"m": layer.m, "n": layer.n}, "designs": modeled},
+        "prepared_strictly_faster": faster,
+        "bit_exact": exact,
+    }
+    return rc, payload
+
+
+def main(smoke: bool = False) -> int:
+    return run(smoke=smoke)[0]
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

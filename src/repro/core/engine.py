@@ -10,13 +10,28 @@ software.
 
 An :class:`Engine` executes ±1 binary matmuls::
 
-    binary_vmm(a_signs, w_signs)   # (..., m) x (m, n) -> (..., n)
-    binary_mmm(groups, w_signs)    # (G, K, m) x (m, n) -> (G, K, n)
+    binary_vmm(a_signs, w)         # (..., m) x (m, n) -> (..., n)
+    binary_mmm(groups, w)          # (G, K, m) x (m, n) -> (G, K, n)
 
 and exposes capability/cost metadata (``info``, ``steps_for``,
 ``preferred_group_size``) that the analytical cost model, the serving
 engine's :class:`~repro.serving.engine.BatchPlanner` and the benchmark
 sweeps consume uniformly.
+
+**Two-phase program/execute contract (PR 4).** The paper's premise is
+Computation-In-Memory: weights are programmed into the PCM crossbar
+ONCE and only activations stream. ``Engine.prepare(w_signs)`` is that
+programming phase in software — it runs every weight-side transform
+once (complement-stack + tile mapping for the crossbar simulators,
+int32 bit-packing for the packed kernel, placement-ordered block
+gathers for the plan-driven tiled backend) and returns an opaque
+:class:`PreparedWeights` artifact. ``binary_vmm``/``binary_mmm`` accept
+either raw ±1 weights or a ``PreparedWeights``; the raw path delegates
+through ``prepare``, so prepared and raw execution are bit-identical by
+construction. ``prepare_cached`` memoizes programming on weight-array
+identity (a bounded :class:`WeightCache` per engine instance), and the
+serving engine programs every binarized projection at construction time
+so decode ticks trace zero weight-side transforms.
 
 ``binary_mmm`` is the batching contract: one call executes G stacked
 K-groups against shared binarized weights. Engines with
@@ -26,29 +41,33 @@ multiplexes (the wavelength count); every other backend reports 1 and
 serves ``binary_mmm`` through the flattened-VMM fallback (a "vmap'd
 group"), so consumers can group unconditionally.
 
-Capability matrix of the registered backends:
+Capability matrix of the registered backends (``prepared`` = what
+``prepare`` programs and holds resident):
 
-====================  =======================================  ==========
-name                  models                                   native MMM
-====================  =======================================  ==========
-``reference``         Eq. 1 in plain jnp (ground truth)        no
-``tacitmap``          tiled ePCM/oPCM crossbar simulator       no
-``wdm``               oPCM + K-wavelength WDM (EinsteinBarrier) yes (K)
-``packed``            TPU bit-packed XNOR+popcount Pallas       no
-``tiled``             mapping-plan sharded tile execution       no
-``custbinarymap``     2T2R/PCSA row-serial baseline [15]        no
-====================  =======================================  ==========
+====================  =======================================  ==========  ====================
+name                  models                                   native MMM  prepared artifact
+====================  =======================================  ==========  ====================
+``reference``         Eq. 1 in plain jnp (ground truth)        no          plain ±1 signs
+``tacitmap``          tiled ePCM/oPCM crossbar simulator       no          complement cell states
+``wdm``               oPCM + K-wavelength WDM (EinsteinBarrier) yes (K)    complement cell states
+``packed``            TPU bit-packed XNOR+popcount Pallas       no          int32 packed words
+``tiled``             mapping-plan sharded tile execution       no          gathered block stacks
+                                                                           + placement indices
+``custbinarymap``     2T2R/PCSA row-serial baseline [15]       no          plain ±1 signs
+====================  =======================================  ==========  ====================
 
-All are bit-exact against ``reference`` (tests/test_engines.py). The
-``packed`` backend is the TPU-native analogue of the crossbar step —
-32 weights per int32 lane, XOR + population_count on the VPU — and runs
-in Pallas interpret mode on CPU so it is testable everywhere.
+All are bit-exact against ``reference`` (tests/test_engines.py,
+tests/test_prepared.py). The ``packed`` backend is the TPU-native
+analogue of the crossbar step — 32 weights per int32 lane, XOR +
+population_count on the VPU — and runs in Pallas interpret mode on CPU
+so it is testable everywhere.
 
 Consumers resolve engines by name (CLI flags, configs) or pass
 :class:`Engine` instances directly::
 
     eng = get_engine("packed")
-    out = eng.binary_vmm(a_signs, w_signs)
+    pw = eng.prepare(w_signs)          # program once ("crossbar write")
+    out = eng.binary_vmm(a_signs, pw)  # stream activations
 
 New backends (multi-level cells, sharded crossbars, GPU) register with
 :func:`register_engine` and become available to models, serving and
@@ -59,15 +78,132 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Protocol, runtime_checkable
+from collections import OrderedDict
+from typing import Any, Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bnn, custbinarymap, tacitmap, wdm
 from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Prepared weights (the programming-phase artifact) + caches
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PreparedWeights:
+    """Weights programmed into one engine's resident execution form.
+
+    Produced by :meth:`Engine.prepare`; consumed by ``binary_vmm`` /
+    ``binary_mmm`` in place of raw ±1 weights, so the weight-side
+    transforms run once per bind instead of once per call — the paper's
+    stationary-weight (CIM) premise made explicit.
+
+    Registered as a JAX pytree: ``data`` holds the array leaves (they
+    ride through jit/scan/vmap like any operand — the serving engine
+    stacks per-repeat artifacts and ``lax.scan`` slices them back per
+    layer), while ``(engine, m, n, aux)`` are static treedef metadata.
+    ``aux`` is engine-specific *hashable* host-side state (e.g. the
+    tiled backend's placement index tuples).
+    """
+
+    engine: str          # name of the backend that programmed this
+    m: int               # logical contraction length
+    n: int               # stored weight vectors (output columns)
+    data: Any            # engine-specific pytree of arrays
+    aux: Any = None      # hashable host-side placement metadata
+
+    def tree_flatten(self):
+        return (self.data,), (self.engine, self.m, self.n, self.aux)
+
+    @classmethod
+    def tree_unflatten(cls, static, children):
+        engine, m, n, aux = static
+        return cls(engine=engine, m=m, n=n, data=children[0], aux=aux)
+
+
+class LRUCache:
+    """Small bounded LRU with hit/miss/eviction counters (host-side)."""
+
+    def __init__(self, maxsize: int = 32):
+        if maxsize < 1:
+            raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._store: OrderedDict[Any, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        try:
+            value = self._store[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._store.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def put(self, key, value) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key) -> bool:
+        return key in self._store
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {
+            "size": len(self._store),
+            "maxsize": self.maxsize,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+
+class WeightCache:
+    """Prepared-weight cache keyed by weight-array *identity*.
+
+    A parameter update produces a NEW ``jax.Array``, so identity keying
+    is the invalidation rule: a changed weight is a guaranteed miss and
+    its stale entry ages out of the bounded LRU. Each entry keeps a
+    strong reference to its key array, so an ``id()`` can never be
+    recycled while the entry is alive. Tracers are never cached — a
+    prepare traced inside jit belongs to that trace only.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self._lru = LRUCache(maxsize)
+
+    def get(self, w) -> PreparedWeights | None:
+        entry = self._lru.get(id(w))
+        if entry is not None and entry[0] is w:
+            return entry[1]
+        return None
+
+    def put(self, w, pw: PreparedWeights) -> None:
+        self._lru.put(id(w), (w, pw))
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return self._lru.stats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,18 +227,22 @@ class EngineInfo:
 class Engine(Protocol):
     """The execution contract every backend implements.
 
-    ``binary_vmm``/``binary_mmm`` consume ±1-valued arrays (any float or
-    integer carrier) and return the exact ±1 dot products (integer
-    valued; the carrier dtype may differ per backend — callers cast).
+    ``binary_vmm``/``binary_mmm`` consume ±1-valued activations (any
+    float or integer carrier) against either raw ±1 weights or a
+    :class:`PreparedWeights` from this engine's ``prepare``, and return
+    the exact ±1 dot products (integer valued; the carrier dtype may
+    differ per backend — callers cast).
     """
 
     name: str
     info: EngineInfo
     spec: CrossbarSpec
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array: ...
+    def prepare(self, w_signs) -> PreparedWeights: ...
 
-    def binary_mmm(self, groups: Array, w_signs: Array) -> Array: ...
+    def binary_vmm(self, a_signs: Array, w) -> Array: ...
+
+    def binary_mmm(self, groups: Array, w) -> Array: ...
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int: ...
 
@@ -110,22 +250,117 @@ class Engine(Protocol):
 
 
 class _EngineBase:
-    """Shared plumbing: spec binding, MMM-via-VMM fallback, repr."""
+    """Shared plumbing: spec binding, the two-phase program/execute
+    contract, MMM-via-VMM fallback, weight cache, repr.
+
+    Subclasses implement ``_program`` (weight signs -> resident data
+    pytree), optionally ``_program_aux`` (hashable host-side placement
+    metadata) and ``_vmm_prepared`` (execute against the artifact).
+    """
 
     info: EngineInfo
 
     def __init__(self, spec: CrossbarSpec | None = None):
         default = OPCM_TILE if self.info.default_spec == "oPCM" else EPCM_TILE
         self.spec = spec or default
+        self.weight_cache = WeightCache()
 
     @property
     def name(self) -> str:
         return self.info.name
 
-    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
+    # -- programming phase --------------------------------------------------
+
+    def _program(self, w_signs: Array):
+        """Engine-specific weight compilation -> ``PreparedWeights.data``.
+        Default: plain ±1 signs (reference / custbinarymap)."""
+        return w_signs
+
+    def _program_aux(self, m: int, n: int):
+        """Hashable host-side placement metadata (``tiled`` overrides)."""
+        del m, n
+        return None
+
+    def prepare(self, w_signs) -> PreparedWeights:
+        """Program ±1 weights (m, n) into this engine's resident form.
+
+        One-time per weight matrix — the paper's crossbar-programming
+        (PCM write) phase. The artifact is accepted by
+        ``binary_vmm``/``binary_mmm`` in place of raw signs; the raw-w
+        path delegates through here, so prepared and raw execution are
+        bit-identical by construction. Idempotent on an already-prepared
+        artifact (validated against this engine's name).
+        """
+        if isinstance(w_signs, PreparedWeights):
+            return self._check_prepared(w_signs)
+        m, n = w_signs.shape
+        return PreparedWeights(
+            engine=self.name,
+            m=int(m),
+            n=int(n),
+            data=self._program(w_signs),
+            aux=self._program_aux(int(m), int(n)),
+        )
+
+    def prepare_cached(self, w_signs, key=None) -> PreparedWeights:
+        """``prepare`` memoized on the *identity* of ``key`` (default:
+        the weight array itself; model layers pass the latent fp32 param
+        so a hit skips re-binarization of an unchanged param entirely).
+
+        ``w_signs`` may be a zero-arg callable producing the signs — it
+        is only invoked on a cache miss, so hits pay no weight-side
+        work at all. Tracers bypass the cache: a prepare traced inside
+        jit is part of that trace and must not leak across calls.
+        """
+        if isinstance(w_signs, PreparedWeights):
+            return self._check_prepared(w_signs)
+        lazy = callable(w_signs)
+        if key is None:
+            if lazy:
+                raise ValueError("a callable w_signs needs an explicit cache key")
+            key = w_signs
+        if isinstance(key, jax.core.Tracer) or isinstance(w_signs, jax.core.Tracer):
+            return self.prepare(w_signs() if lazy else w_signs)
+        pw = self.weight_cache.get(key)
+        if pw is None:
+            pw = self.prepare(w_signs() if lazy else w_signs)
+            self.weight_cache.put(key, pw)
+        return pw
+
+    def _check_prepared(self, pw: PreparedWeights) -> PreparedWeights:
+        if pw.engine != self.name:
+            raise ValueError(
+                f"prepared weights were programmed for engine {pw.engine!r}; "
+                f"this engine is {self.name!r} — re-run prepare()"
+            )
+        return pw
+
+    def cache_stats(self) -> dict[str, dict[str, int]]:
+        """Hit/miss counters for every cache this engine maintains."""
+        return {"weight_cache": self.weight_cache.stats}
+
+    # -- execution phase ----------------------------------------------------
+
+    def _check_operands(self, a_signs: Array, pw: PreparedWeights) -> PreparedWeights:
+        """A mis-paired artifact whose m happens to divide the activation
+        length would otherwise reshape into silent garbage (wdm/packed)."""
+        if a_signs.shape[-1] != pw.m:
+            raise ValueError(
+                f"activation length {a_signs.shape[-1]} does not match the "
+                f"prepared weights' m={pw.m} (engine {self.name}) — wrong "
+                f"artifact for this projection?"
+            )
+        return pw
+
+    def binary_vmm(self, a_signs: Array, w) -> Array:
+        """(..., m) x (m, n) -> (..., n); ``w`` raw or prepared."""
+        return self._vmm_prepared(a_signs, self._check_operands(a_signs, self.prepare(w)))
+
+    def binary_mmm(self, groups: Array, w) -> Array:
         """(G, K, m) x (m, n) -> (G, K, n); default: flatten to a VMM."""
         g, k, m = groups.shape
-        out = self.binary_vmm(groups.reshape(g * k, m), w_signs)
+        pw = self._check_operands(groups, self.prepare(w))
+        out = self._vmm_prepared(groups.reshape(g * k, m), pw)
         return out.reshape(g, k, -1)
 
     def preferred_group_size(self) -> int:
@@ -152,6 +387,29 @@ class _EngineBase:
         return f"<Engine {self.name} spec={self.spec.technology}>"
 
 
+def _stacked_cells(w_signs: Array) -> Array:
+    """The crossbar simulators' programmed state: the complement-stacked
+    {0,1} cell matrix (2m, n) — Fig. 2-(b), the mapping's PCM write.
+
+    Stored COMPACT, not as the padded (row_tiles, R, col_tiles, C) tile
+    array: the tile grid is a pure reshape *view* of this matrix, and
+    holding the padded form resident makes every execute read
+    RT·R·CT·C cells where the logical matrix is only 2m x n — measured
+    slower than the unprepared path on CPU (memory traffic dominates at
+    decode sizes). The pad+reshape at execute time fuses into the MAC
+    einsum; the weight-side *arithmetic* (binarize, complement stack)
+    is what prepare hoists.
+    """
+    return bnn.stack_complement_weights(bnn.signs_to_bits(w_signs)).astype(jnp.float32)
+
+
+def _mapped_layer(pw: PreparedWeights, spec: CrossbarSpec) -> tacitmap.MappedLayer:
+    """Rehydrate a :class:`tacitmap.MappedLayer` around prepared cell
+    states (the tile grid is a pure function of (m, n, spec) — only the
+    cell matrix carries state; layout shared with ``map_weights``)."""
+    return tacitmap.layer_from_cells(pw.data, pw.m, pw.n, spec)
+
+
 class ReferenceEngine(_EngineBase):
     """Eq. 1 in plain jnp — the ground truth every backend must match."""
 
@@ -161,8 +419,8 @@ class ReferenceEngine(_EngineBase):
         hardware="any (XLA)",
     )
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
-        return bnn.binary_matmul_signs(a_signs, w_signs)
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
+        return bnn.binary_matmul_signs(a_signs, pw.data)
 
 
 class TacitMapEngine(_EngineBase):
@@ -174,8 +432,13 @@ class TacitMapEngine(_EngineBase):
         hardware="ePCM/oPCM crossbar tiles + ADC readout",
     )
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
-        return tacitmap.binary_matmul(a_signs, w_signs, self.spec)
+    def _program(self, w_signs: Array):
+        # the paper's programming step: write the complement cell states
+        return _stacked_cells(w_signs)
+
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
+        pc = tacitmap.apply(_mapped_layer(pw, self.spec), bnn.signs_to_bits(a_signs))
+        return 2 * pc - pw.m
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int:
         return tacitmap.steps_for(m, n, n_inputs, self.spec)
@@ -192,22 +455,18 @@ class WDMEngine(_EngineBase):
         default_spec="oPCM",
     )
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
-        m = a_signs.shape[-1]
-        mapped = tacitmap.map_weights(
-            bnn.signs_to_bits(w_signs).astype(jnp.int32), self.spec
-        )
-        flat = a_signs.reshape(-1, m)
-        pc = wdm.wdm_apply(mapped, bnn.signs_to_bits(flat))
-        return (2 * pc - m).reshape(*a_signs.shape[:-1], -1)
+    def _program(self, w_signs: Array):
+        return _stacked_cells(w_signs)
 
-    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
-        m = groups.shape[-1]
-        mapped = tacitmap.map_weights(
-            bnn.signs_to_bits(w_signs).astype(jnp.int32), self.spec
-        )
-        pc = wdm.mmm(mapped, bnn.signs_to_bits(groups))
-        return 2 * pc - m
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
+        flat = a_signs.reshape(-1, pw.m)
+        pc = wdm.wdm_apply(_mapped_layer(pw, self.spec), bnn.signs_to_bits(flat))
+        return (2 * pc - pw.m).reshape(*a_signs.shape[:-1], -1)
+
+    def binary_mmm(self, groups: Array, w) -> Array:
+        pw = self._check_operands(groups, self.prepare(w))
+        pc = wdm.mmm(_mapped_layer(pw, self.spec), bnn.signs_to_bits(groups))
+        return 2 * pc - pw.m
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int:
         del m, n
@@ -224,7 +483,9 @@ class PackedEngine(_EngineBase):
     32 binary weights/activations per int32 lane, XOR + population_count
     on the VPU (kernels/xnor_matmul.py). On CPU the kernel runs in
     Pallas interpret mode automatically (``interpret=None``), so the
-    backend is testable everywhere; on TPU it compiles.
+    backend is testable everywhere; on TPU it compiles. ``prepare``
+    holds the weight words resident (``ops.pack_weights``) so only the
+    activation side packs per call.
     """
 
     info = EngineInfo(
@@ -241,10 +502,17 @@ class PackedEngine(_EngineBase):
     def with_spec(self, spec: CrossbarSpec) -> "PackedEngine":
         return type(self)(spec, interpret=self.interpret)
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+    def _program(self, w_signs: Array):
         from repro.kernels import ops
 
-        return ops.xnor_matmul(a_signs, w_signs, interpret=self.interpret)
+        return ops.pack_weights(w_signs)
+
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
+        from repro.kernels import ops
+
+        return ops.xnor_matmul_packed_weights(
+            a_signs, pw.data, m=pw.m, n=pw.n, interpret=self.interpret
+        )
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int:
         # one fused kernel launch executes the whole (B, m, n) matmul
@@ -264,6 +532,14 @@ class TiledEngine(_EngineBase):
     back per output column group. Bit-exact vs ``reference`` for every
     allocator policy — placement permutes tile order, never the math.
 
+    ``prepare`` programs the placement: the complement cell states are
+    compiled once and the host-side placement indices (block order,
+    gather/segment ids — previously recomputed per call) ride along as
+    hashable aux metadata; execute rebuilds the plan-ordered (T, R, C)
+    block stack as a fused view. Ad-hoc placements and their index
+    arrays are memoized per (m, n) in bounded LRUs on the engine
+    instance.
+
     The tile axis is the sharding axis: under an active
     ``activation_hints`` mesh the stacked tiles and their partials are
     constrained to the ``model`` axis, so a multi-device run splits the
@@ -282,6 +558,8 @@ class TiledEngine(_EngineBase):
         hardware="ePCM/oPCM crossbar tile pool; tile axis shards over a jax mesh",
     )
 
+    ADHOC_CACHE_SIZE = 32
+
     def __init__(self, spec: CrossbarSpec | None = None, *, plan=None, policy: str = "tacitmap"):
         if plan is not None and spec is None:
             spec = plan.spec
@@ -294,11 +572,19 @@ class TiledEngine(_EngineBase):
             )
         self.plan = plan
         self.policy = policy
-        self._adhoc_cache: dict[tuple[int, int], object] = {}
+        self._adhoc_cache = LRUCache(self.ADHOC_CACHE_SIZE)
+        self._index_cache = LRUCache(self.ADHOC_CACHE_SIZE)
 
     def with_spec(self, spec: CrossbarSpec) -> "TiledEngine":
         keep = self.plan if (self.plan is not None and self.plan.spec == spec) else None
         return type(self)(spec, plan=keep, policy=self.policy)
+
+    def cache_stats(self) -> dict[str, dict[str, int]]:
+        return {
+            **super().cache_stats(),
+            "adhoc_placements": self._adhoc_cache.stats,
+            "placement_indices": self._index_cache.stats,
+        }
 
     def _placement(self, m: int, n: int):
         """The plan's LayerPlan for a (m, n) matrix, or an on-the-fly
@@ -314,39 +600,73 @@ class TiledEngine(_EngineBase):
             lp = allocator.allocate(
                 ir.adhoc_layer(m, n), spec=self.spec, policy=self.policy
             ).layers[0]
-            self._adhoc_cache[(m, n)] = lp
+            self._adhoc_cache.put((m, n), lp)
         return lp
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
-        import numpy as np
+    def _indices(self, m: int, n: int):
+        """Placement + host-side index arrays for a (m, n) matrix,
+        memoized per shape: the plan's block order and the derived
+        gather/segment ids used to be rebuilt on every ``binary_vmm``."""
+        cached = self._index_cache.get((m, n))
+        if cached is None:
+            lp = self._placement(m, n)
+            order = lp.block_order()
+            ct = lp.grid.col_tiles
+            block_ids = np.asarray([rb * ct + cb for rb, cb in order], np.int32)
+            row_ids = np.asarray([rb for rb, _ in order], np.int32)
+            col_ids = np.asarray([cb for _, cb in order], np.int32)
+            cached = (lp, block_ids, row_ids, col_ids)
+            self._index_cache.put((m, n), cached)
+        return cached
 
+    def _program(self, w_signs: Array):
+        # programmed cell states (complement-stacked, compact). The
+        # placement-ordered (T, R, C) block stack is rebuilt as a fused
+        # pad+reshape+gather VIEW at execute time: holding the gathered
+        # stack resident makes every call (and every lax.scan slice in
+        # the serving decode) move T·R·C cells where the logical matrix
+        # is 2m x n — measured slower than the unprepared path. What
+        # prepare hoists is the weight-side arithmetic and the
+        # placement computation (allocator + block order, in aux).
+        return _stacked_cells(w_signs)
+
+    def _program_aux(self, m: int, n: int):
+        lp, block_ids, row_ids, col_ids = self._indices(m, n)
+        return (
+            tuple(int(i) for i in block_ids),
+            tuple(int(i) for i in row_ids),
+            tuple(int(i) for i in col_ids),
+            int(lp.grid.row_tiles),
+            int(lp.grid.col_tiles),
+            int(self.spec.rows),
+            int(self.spec.cols),
+        )
+
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
         from repro.core.crossbar import adc_quantize
         from repro.distributed.hints import hint
 
-        m, n = w_signs.shape
-        lp = self._placement(m, n)
-        spec, grid = self.spec, lp.grid
-        R, C = spec.rows, spec.cols
-        RT, CT = grid.row_tiles, grid.col_tiles
-
-        order = lp.block_order()
-        block_ids = np.asarray([rb * CT + cb for rb, cb in order], np.int32)
-        row_ids = np.asarray([rb for rb, _ in order], np.int32)
-        col_ids = np.asarray([cb for _, cb in order], np.int32)
-
-        # weights: complement-stack, pad to the tile grid, gather the
-        # blocks in the PLAN'S placement order (the policy's layout)
-        stacked = bnn.stack_complement_weights(bnn.signs_to_bits(w_signs))
-        padded = jnp.pad(stacked, ((0, RT * R - 2 * m), (0, CT * C - n)))
+        block_ids, row_ids, col_ids, RT, CT, R, C = pw.aux
+        if (R, C) != (self.spec.rows, self.spec.cols):
+            raise ValueError(
+                f"prepared cells were placed on {R}x{C} blocks but the engine "
+                f"is bound to {self.spec.rows}x{self.spec.cols} tiles — re-run prepare()"
+            )
+        m, n = pw.m, pw.n
+        spec = self.spec
+        # the placement view: pad to the grid, gather blocks in the
+        # PLAN'S order (the policy's layout)
+        padded = jnp.pad(pw.data, ((0, RT * R - 2 * m), (0, CT * C - n)))
         blocks = padded.reshape(RT, R, CT, C).transpose(0, 2, 1, 3).reshape(RT * CT, R, C)
-        tiles = jnp.take(blocks, block_ids, axis=0).astype(jnp.float32)
+        tiles = jnp.take(blocks, jnp.asarray(block_ids, jnp.int32), axis=0)
         tiles = hint(tiles, "model")  # shard the tile axis when a mesh is active
 
         # inputs: complement drive, cut into the row blocks each tile sees
         drive = bnn.concat_complement_input(bnn.signs_to_bits(a_signs))
         drive = jnp.pad(drive, [(0, 0)] * (drive.ndim - 1) + [(0, RT * R - 2 * m)])
         drive = drive.reshape(*drive.shape[:-1], RT, R)
-        drive_t = jnp.moveaxis(jnp.take(drive, row_ids, axis=-2), -2, 0)  # (T, ..., R)
+        gather = jnp.take(drive, jnp.asarray(row_ids, jnp.int32), axis=-2)
+        drive_t = jnp.moveaxis(gather, -2, 0)  # (T, ..., R)
 
         def one_tile(tile: Array, drv: Array) -> Array:
             # one crossbar activation: analog MAC + that tile's ADC
@@ -357,7 +677,9 @@ class TiledEngine(_EngineBase):
         partial = hint(partial, "model")
         # digital partial-sum accumulation: row-block partials of each
         # output column group add up, in whatever order the plan placed them
-        summed = jax.ops.segment_sum(partial, jnp.asarray(col_ids), num_segments=CT)
+        summed = jax.ops.segment_sum(
+            partial, jnp.asarray(col_ids, jnp.int32), num_segments=CT
+        )
         out = jnp.moveaxis(summed, 0, -2)  # (..., CT, C)
         pc = out.reshape(*out.shape[:-2], CT * C)[..., :n]
         return 2 * pc - m
@@ -389,8 +711,8 @@ class CustBinaryMapEngine(_EngineBase):
         hardware="ePCM 2T2R arrays + precharge sense amplifiers",
     )
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
-        return custbinarymap.binary_matmul(a_signs, w_signs, self.spec)
+    def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
+        return custbinarymap.binary_matmul(a_signs, pw.data, self.spec)
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int:
         return custbinarymap.steps_for(m, n, n_inputs, self.spec)
@@ -414,6 +736,8 @@ class GroupedEngine:
     For ``native_mmm`` backends (WDM) each K-group is one crossbar
     step; for the rest the group flattens back to a VMM (a vmap'd
     group), so the adapter composes with every registered engine.
+    Prepared weights pass straight through to the base backend —
+    ``prepare``/``prepare_cached`` and the weight cache delegate.
     """
 
     def __init__(self, base: Engine, k: int):
@@ -428,7 +752,29 @@ class GroupedEngine:
     def name(self) -> str:
         return f"{self.base.name}@k{self.k}"
 
-    def binary_vmm(self, a_signs: Array, w_signs: Array) -> Array:
+    @property
+    def weight_cache(self) -> WeightCache | None:
+        return getattr(self.base, "weight_cache", None)
+
+    def prepare(self, w_signs):
+        """Delegates programming to the base backend; a minimal backend
+        without the two-phase contract is served raw signs (which its
+        ``binary_mmm`` accepts unchanged)."""
+        if hasattr(self.base, "prepare"):
+            return self.base.prepare(w_signs)
+        return w_signs
+
+    def prepare_cached(self, w_signs, key=None):
+        if hasattr(self.base, "prepare_cached"):
+            return self.base.prepare_cached(w_signs, key)
+        return w_signs() if callable(w_signs) else w_signs
+
+    def cache_stats(self) -> dict[str, dict[str, int]]:
+        if hasattr(self.base, "cache_stats"):
+            return self.base.cache_stats()
+        return {}
+
+    def binary_vmm(self, a_signs: Array, w) -> Array:
         m = a_signs.shape[-1]
         flat = a_signs.reshape(-1, m)
         b = flat.shape[0]
@@ -438,12 +784,12 @@ class GroupedEngine:
             flat = jnp.concatenate(
                 [flat, jnp.ones((pad, m), flat.dtype)], axis=0
             )
-        out = self.base.binary_mmm(flat.reshape(g, self.k, m), w_signs)
+        out = self.base.binary_mmm(flat.reshape(g, self.k, m), w)
         out = out.reshape(g * self.k, -1)[:b]
         return out.reshape(*a_signs.shape[:-1], -1)
 
-    def binary_mmm(self, groups: Array, w_signs: Array) -> Array:
-        return self.base.binary_mmm(groups, w_signs)
+    def binary_mmm(self, groups: Array, w) -> Array:
+        return self.base.binary_mmm(groups, w)
 
     def with_spec(self, spec: CrossbarSpec) -> "GroupedEngine":
         return GroupedEngine(resolve(self.base, spec), self.k)
@@ -494,10 +840,15 @@ def get_engine(name: str, spec: CrossbarSpec | None = None, **kw) -> Engine:
 
 
 def resolve(engine: str | Engine, spec: CrossbarSpec | None = None) -> Engine:
-    """Accept an engine name or an already-constructed Engine instance."""
+    """Accept an engine name or an already-constructed Engine instance.
+
+    Spec comparison is by *equality*, not identity: an equal-but-distinct
+    ``CrossbarSpec`` must not rebuild the engine (rebuilding would bust
+    its per-instance weight/placement caches for no functional change).
+    """
     if isinstance(engine, str):
         return get_engine(engine, spec)
-    if spec is not None and engine.spec is not spec:
+    if spec is not None and engine.spec != spec:
         if hasattr(engine, "with_spec"):  # preserves extra ctor state
             return engine.with_spec(spec)
         return get_engine(engine.name, spec)

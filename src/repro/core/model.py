@@ -57,6 +57,18 @@ def _is_edge(i: int, n_layers: int) -> bool:
     return i == 0 or i == n_layers - 1
 
 
+def _programmed(eng, w: Array):
+    """Program the binarized weights through the engine's identity-keyed
+    ``WeightCache``, keyed on the latent param ``w`` (stable across
+    calls). Binarization is passed lazily — a cache hit pays zero
+    weight-side work. Falls back to raw signs for minimal third-party
+    engines without the two-phase contract."""
+    make = lambda: jnp.where(w >= 0, 1.0, -1.0)  # noqa: E731
+    if hasattr(eng, "prepare_cached"):
+        return eng.prepare_cached(make, key=w)
+    return make()
+
+
 def mlp_forward_train(params: dict, x: Array, cfg: MLPConfig) -> Array:
     """Training forward: STE binarization on hidden layers.
 
@@ -96,8 +108,7 @@ def mlp_forward_infer(
             h = h @ w + params[f"b{i}"]
         else:
             a = jnp.where(h >= 0, 1.0, -1.0)
-            wb = jnp.where(w >= 0, 1.0, -1.0)
-            pc = eng.binary_vmm(a, wb)
+            pc = eng.binary_vmm(a, _programmed(eng, w))
             h = pc.astype(jnp.float32) / math.sqrt(w.shape[0]) + params[f"b{i}"]
         if i < cfg.n_layers - 1:
             h = params[f"g{i}"] * h
@@ -187,8 +198,7 @@ def conv_forward(
                 h = bnn.binary_matmul_signs(a, wb) * scale
             else:
                 a = jnp.where(cols >= 0, 1.0, -1.0)
-                wb = jnp.where(w >= 0, 1.0, -1.0)
-                h = eng.binary_vmm(a, wb).astype(jnp.float32) * scale
+                h = eng.binary_vmm(a, _programmed(eng, w)).astype(jnp.float32) * scale
         h = params[f"cg{i}"] * h  # learnable pre-sign affine (no ReLU: see mlp)
         h = _avgpool(h, pool)
     h = h.reshape(h.shape[0], -1)
@@ -203,9 +213,8 @@ def conv_forward(
                 h = bnn.binary_matmul_signs(a, wb) * scale + params[f"fb{i}"]
             else:
                 a = jnp.where(h >= 0, 1.0, -1.0)
-                wb = jnp.where(w >= 0, 1.0, -1.0)
                 h = (
-                    eng.binary_vmm(a, wb).astype(jnp.float32) * scale
+                    eng.binary_vmm(a, _programmed(eng, w)).astype(jnp.float32) * scale
                     + params[f"fb{i}"]
                 )
     return h

@@ -51,17 +51,28 @@ class MappedLayer:
         return 1
 
 
-def map_weights(w_bits: Array, spec: CrossbarSpec = EPCM_TILE) -> MappedLayer:
-    """Map a {0,1} weight matrix (m, n) onto crossbar tiles, TacitMap-style."""
-    m, n = w_bits.shape
-    stacked = bnn.stack_complement_weights(w_bits)  # (2m, n)
+def layer_from_cells(
+    cells: Array, m: int, n: int, spec: CrossbarSpec = EPCM_TILE
+) -> MappedLayer:
+    """Lay programmed complement cell states (2m, n) onto the tile grid.
+
+    The single source of truth for the pad/reshape layout — used both by
+    :func:`map_weights` (raw path) and the prepared-weights execute path
+    (``repro.core.engine``), so the two can never drift apart.
+    """
     grid = TileGrid(rows=2 * m, cols=n, spec=spec)
     R, C = spec.rows, spec.cols
     pad_r = grid.row_tiles * R - 2 * m
     pad_c = grid.col_tiles * C - n
-    padded = jnp.pad(stacked, ((0, pad_r), (0, pad_c)))
+    padded = jnp.pad(cells, ((0, pad_r), (0, pad_c)))
     tiles = padded.reshape(grid.row_tiles, R, grid.col_tiles, C)
     return MappedLayer(tiles=tiles, m=m, n=n, spec=spec, grid=grid)
+
+
+def map_weights(w_bits: Array, spec: CrossbarSpec = EPCM_TILE) -> MappedLayer:
+    """Map a {0,1} weight matrix (m, n) onto crossbar tiles, TacitMap-style."""
+    m, n = w_bits.shape
+    return layer_from_cells(bnn.stack_complement_weights(w_bits), m, n, spec)
 
 
 def apply(

@@ -47,6 +47,18 @@ def pack_signs(signs: Array, axis: int = -1) -> Array:
     return pack_bits((signs > 0).astype(jnp.uint32), axis)
 
 
+def pack_weights(w_signs: Array) -> Array:
+    """Program ±1 weights for the packed kernel: (m, n) -> (ceil(m/32), n).
+
+    int32 words packed along the contraction axis (bit = 1 for +1, zero
+    pad bits). This is the packed backend's one-time "crossbar
+    programming" step — callers that hold weights resident (the
+    prepared-weights path, ``Engine.prepare``) pay it once and then
+    stream only activations through :func:`xnor_matmul_packed_weights`.
+    """
+    return pack_bits((w_signs > 0).astype(jnp.uint32), axis=0)
+
+
 def _pad_to(x: Array, mult: int, axis: int) -> Array:
     size = x.shape[axis]
     pad = (-size) % mult
@@ -77,7 +89,37 @@ def _row_block(requested: int, size: int, unit: int = 8) -> int:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bkw", "interpret"))
+@functools.partial(jax.jit, static_argnames=("m", "n", "bm", "bn", "bkw", "interpret"))
+def xnor_matmul_packed_weights(
+    a_signs: Array,
+    w_packed: Array,
+    *,
+    m: int,
+    n: int,
+    bm: int = _xnor_kernel.DEFAULT_BM,
+    bn: int = _xnor_kernel.DEFAULT_BN,
+    bkw: int = _xnor_kernel.DEFAULT_BKW,
+    interpret: bool | None = None,
+) -> Array:
+    """±1 binary matmul against pre-packed weights (:func:`pack_weights`).
+
+    (..., m) x (ceil(m/32), n) words -> (..., n) int32. ``m``/``n`` are
+    the *logical* weight dims (static): the word padding carries zero
+    bits, and the Eq. 1 affine correction ``dot = m - 2 * hamming``
+    needs the true contraction length. Only the activation side packs
+    per call — this is the execute phase of the two-phase contract.
+    """
+    lead = a_signs.shape[:-1]
+    a2 = a_signs.reshape(-1, m)
+    ap = pack_bits((a2 > 0).astype(jnp.uint32))
+    bm_eff = _row_block(bm, a2.shape[0])
+    ap = _pad_to(_pad_to(ap, bm_eff, 0), bkw, 1)
+    wp = _pad_to(_pad_to(w_packed, bkw, 0), bn, 1)
+    ham = _xnor_kernel.hamming_matmul_packed(ap, wp, bm=bm_eff, bn=bn, bkw=bkw, interpret=interpret)
+    out = m - 2 * ham[: a2.shape[0], :n]
+    return out.reshape(*lead, n)
+
+
 def xnor_matmul(
     a_signs: Array,
     w_signs: Array,
@@ -90,19 +132,20 @@ def xnor_matmul(
     """±1 binary matmul via the packed XNOR+popcount Pallas kernel.
 
     (..., m) x (m, n) -> (..., n) int32. Bit-exact vs the ±1 matmul:
-    dot = m - 2 * hamming.
+    dot = m - 2 * hamming. Packs the weights then delegates to
+    :func:`xnor_matmul_packed_weights` — one execution path, so the raw
+    and prepared-weight routes are bit-identical by construction.
     """
-    m = a_signs.shape[-1]
-    lead = a_signs.shape[:-1]
-    a2 = a_signs.reshape(-1, m)
-    ap = pack_bits((a2 > 0).astype(jnp.uint32))
-    wp = pack_bits((w_signs > 0).astype(jnp.uint32), axis=0)
-    bm = _row_block(bm, a2.shape[0])
-    ap = _pad_to(_pad_to(ap, bm, 0), bkw, 1)
-    wp = _pad_to(_pad_to(wp, bkw, 0), bn, 1)
-    ham = _xnor_kernel.hamming_matmul_packed(ap, wp, bm=bm, bn=bn, bkw=bkw, interpret=interpret)
-    out = m - 2 * ham[: a2.shape[0], : w_signs.shape[1]]
-    return out.reshape(*lead, w_signs.shape[1])
+    return xnor_matmul_packed_weights(
+        a_signs,
+        pack_weights(w_signs),
+        m=int(a_signs.shape[-1]),
+        n=int(w_signs.shape[1]),
+        bm=bm,
+        bn=bn,
+        bkw=bkw,
+        interpret=interpret,
+    )
 
 
 # ---------------------------------------------------------------------------

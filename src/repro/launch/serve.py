@@ -124,6 +124,15 @@ def main(argv: list[str] | None = None) -> int:
     params = (
         encdec_lib.init_params(key, cfg) if cfg.is_encdec else lm_lib.init_params(key, cfg)
     )
+    if grouped is not None:
+        # crossbar programming phase: compile the binarized projections
+        # into the backend's resident form once; the decode loop below
+        # then streams only activations (PR 4 two-phase contract)
+        t0 = time.time()
+        params, n_programmed = lm_lib.program_weights(params, cfg, grouped)
+        print(f"[serve] programmed {n_programmed} binarized projection "
+              f"instance(s) into {args.engine} resident form "
+              f"({(time.time() - t0) * 1e3:.1f} ms, one-time PCM write)")
     batch = lm_batch(cfg, args.batch, args.prompt_len, seed=args.seed)
     tokens = batch["tokens"]
 

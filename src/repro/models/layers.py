@@ -106,6 +106,21 @@ def infer_engine(cfg: ModelConfig, plan=None):
     return engine_lib.get_engine(cfg.bnn_engine)
 
 
+def _require_latent(p: Params, w, engine) -> None:
+    """Programmed projections carry only the engine artifact: reaching a
+    path that needs the latent weights is a caller error — fail with the
+    reason instead of a NoneType crash deep inside a scan."""
+    if w is None:
+        prepared = p.get("prepared")
+        programmed_for = getattr(prepared, "engine", "<unknown>")
+        raise ValueError(
+            f"projection was programmed for engine {programmed_for!r} "
+            "(lm.program_weights replaced the latent 'w' with 'prepared'/"
+            "'alpha'); run it through that engine with quant='bnn', or use "
+            f"the original un-programmed params (engine passed: {engine!r})"
+        )
+
+
 def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     """Linear layer; ``quant="bnn"`` routes through the paper's BitLinear:
     sign-binarized weights/activations (STE in training) with a
@@ -122,16 +137,37 @@ def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     through any registered backend — e.g. the packed XNOR+popcount
     Pallas kernel. Engines are bit-exact vs the plain matmul but not
     differentiable; inference callers resolve one via ``infer_engine``.
+
+    Two-phase execution: when ``p`` carries a programmed projection
+    (``p["prepared"]``/``p["alpha"]`` from ``lm.program_weights`` — the
+    crossbar-programming phase) and an engine is bound, the weight-side
+    transforms are skipped entirely and only activations stream.
+    Otherwise the engine's per-instance ``WeightCache`` memoizes the
+    programming on the latent param's identity (concrete arrays only —
+    tracers prepare inline, exactly the pre-PR-4 graph).
     """
-    w = p["w"]
+    w = p.get("w")  # absent on programmed projections (prepared replaces it)
     if quant == "bnn":
-        alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
         beta = jnp.mean(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True)
         xb = bnn.binarize_ste(x.astype(jnp.float32))
-        wb = bnn.binarize_ste(w)
-        dot = xb @ wb if engine is None else engine.binary_vmm(xb, wb).astype(jnp.float32)
+        pw = p.get("prepared") if engine is not None else None
+        if pw is not None:
+            alpha = p["alpha"]
+            dot = engine.binary_vmm(xb, pw).astype(jnp.float32)
+        else:
+            _require_latent(p, w, engine)
+            alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
+            if engine is None:
+                dot = xb @ bnn.binarize_ste(w)
+            elif hasattr(engine, "prepare_cached"):
+                # lazy: binarization runs only on a weight-cache miss
+                wx = engine.prepare_cached(lambda: bnn.binarize_ste(w), key=w)
+                dot = engine.binary_vmm(xb, wx).astype(jnp.float32)
+            else:
+                dot = engine.binary_vmm(xb, bnn.binarize_ste(w)).astype(jnp.float32)
         out = (dot * (alpha * beta)).astype(ACT_DTYPE)
     else:
+        _require_latent(p, w, engine)
         out = jnp.matmul(x, w.astype(x.dtype))
     if "b" in p:
         out = out + p["b"].astype(out.dtype)

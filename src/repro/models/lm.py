@@ -17,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import bnn
 from repro.distributed.hints import hint
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
@@ -218,6 +219,70 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.0
 # ---------------------------------------------------------------------------
 # Prefill / decode (serving)
 # ---------------------------------------------------------------------------
+
+# The binarized projection tensors of the LM spine (== the mapping IR's
+# coverage): these are the weights a crossbar holds resident.
+BINARIZED_PROJECTIONS = {"attn": ("q", "k", "v", "o"), "ffn": ("w1", "w3", "w2")}
+
+
+def program_weights(params: Params, cfg: ModelConfig, engine) -> tuple[Params, int]:
+    """Crossbar-programming phase: compile every binarized projection
+    into ``engine``'s resident form ONCE, before serving starts.
+
+    Walks the stacked block params and attaches a
+    :class:`repro.core.engine.PreparedWeights` (plus the precomputed
+    per-tensor weight scale) alongside each attn q/k/v/o and FFN
+    w1/w3/w2 projection — exactly the transforms ``layers.dense``
+    applies per call, hoisted to bind time, so prefill/decode traces
+    carry zero weight-side work (the paper's stationary-weight premise:
+    program the PCM once, stream only activations). Per-repeat slices
+    are programmed individually and stacked, so ``lax.scan`` slices the
+    artifact back per layer bit-identically.
+
+    Returns ``(programmed_params, n_programmed)`` where ``n_programmed``
+    counts projection *instances* (stacked repeats each count). The
+    input pytree is not mutated. No-op (0 programmed) unless
+    ``cfg.quant == "bnn"`` and an engine is bound.
+    """
+    if cfg.quant != "bnn" or engine is None or "blocks" not in params:
+        return params, 0
+    base = getattr(engine, "base", engine)  # unwrap a GroupedEngine
+    if not hasattr(base, "prepare"):
+        # a minimal third-party backend without the two-phase contract:
+        # serve it raw (same fallback as layers.dense / model._programmed)
+        return params, 0
+    n_programmed = 0
+    blocks = {}
+    for slot_name, slot in params["blocks"].items():
+        new_slot = dict(slot)
+        for part, projs in BINARIZED_PROJECTIONS.items():
+            if part not in slot:
+                continue
+            sub = dict(slot[part])
+            for proj_name in projs:
+                if proj_name not in sub:
+                    continue
+                proj = dict(sub[proj_name])
+                w = proj.pop("w")  # (L, m, n): stacked over scan repeats
+                prepared, alphas = [], []
+                for i in range(w.shape[0]):
+                    wi = w[i]
+                    prepared.append(base.prepare(bnn.binarize_ste(wi)))
+                    alphas.append(jnp.mean(jnp.abs(wi)).astype(jnp.float32))
+                # the latent weights are NOT carried along: the
+                # programmed artifact fully replaces them on the serving
+                # path (like the hardware, which holds only cell states),
+                # and dropping them halves the per-tick weight bytes the
+                # decode scan slices
+                proj["prepared"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *prepared
+                )
+                proj["alpha"] = jnp.stack(alphas)
+                sub[proj_name] = proj
+                n_programmed += int(w.shape[0])
+            new_slot[part] = sub
+        blocks[slot_name] = new_slot
+    return dict(params, blocks=blocks), n_programmed
 
 
 def _apply_repeat_prefill(

@@ -29,6 +29,15 @@ Design:
   spanning the pool. Ragged
   tails (active % K != 0) pad the last group by repeating a real slot
   (an idle comb line); pad lanes are computed and discarded.
+* **Crossbar programming phase** (PR 4): when a registry backend is
+  bound, every binarized projection is compiled into the engine's
+  resident form ONCE at construction (``lm.program_weights`` — mapped
+  complement tiles, packed int32 words, gathered block stacks ...), so
+  decode ticks trace zero weight-side transforms and stream only
+  activations — the paper's Computation-In-Memory premise. The phase is
+  counted in ``stats`` (``programmed`` instances, ``program_s`` wall
+  time); ``prepare_weights=False`` restores the per-tick re-programming
+  path (the prepared-vs-raw benchmark baseline).
 * **Per-slot KV-cache scatter**: gather, decode and the scatter of the
   group's cache rows back into the resident pool run as ONE fused
   compiled dispatch per tick. Pad lanes mirror a real slot (identical
@@ -49,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any
 
 import jax
@@ -140,6 +150,7 @@ class ServingEngine:
         engine: str | None = None,
         group_size: int | None = None,
         mapping_plan=None,
+        prepare_weights: bool = True,
     ):
         base_engine: engine_lib.Engine | None = None
         if engine is not None and engine != "reference":
@@ -180,7 +191,21 @@ class ServingEngine:
                                   # the plain-jnp path executes instead)
             "pad_lanes": 0,       # idle wavelengths from ragged tails
             "prefills": 0,
+            "programmed": 0,      # projection instances compiled at bind time
+            "program_s": 0.0,     # crossbar-programming phase wall time
         }
+
+        # crossbar programming: compile every binarized projection into
+        # the backend's resident form ONCE, so decode ticks trace zero
+        # weight-side transforms (prepare_weights=False keeps the
+        # per-tick re-programming path for comparison benchmarks)
+        if self._exec is not None and prepare_weights:
+            t0 = time.perf_counter()
+            self.params, n_programmed = lm_lib.program_weights(
+                self.params, cfg, self._exec
+            )
+            self.stats["programmed"] = n_programmed
+            self.stats["program_s"] = time.perf_counter() - t0
 
         self.caches = lm_lib.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)        # next write position
@@ -226,6 +251,13 @@ class ServingEngine:
 
     def idle(self) -> bool:
         return not self.queue and all(r is None for r in self.slot_req)
+
+    def cache_stats(self) -> dict[str, dict[str, int]]:
+        """Hit/miss counters from the bound engine's caches (weight
+        cache, tiled placement caches); ``{}`` on the plain-jnp path."""
+        if self._exec is None or not hasattr(self._exec, "cache_stats"):
+            return {}
+        return self._exec.cache_stats()
 
     # -- internals ------------------------------------------------------------
     def _graft(self, slot: int, pre_caches: Any, prompt_len: int) -> None:

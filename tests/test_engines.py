@@ -57,6 +57,17 @@ class TestRegistry:
         eng = engine_lib.resolve(engine_lib.get_engine("tacitmap"), spec)
         assert eng.spec is spec
 
+    def test_resolve_equal_spec_keeps_instance(self):
+        """Spec comparison is by equality: an equal-but-distinct
+        CrossbarSpec must NOT rebuild the engine (a rebuild would bust
+        its per-instance weight/placement caches)."""
+        import dataclasses
+
+        eng = engine_lib.get_engine("tacitmap")
+        twin = dataclasses.replace(eng.spec)
+        assert twin is not eng.spec and twin == eng.spec
+        assert engine_lib.resolve(eng, twin) is eng
+
     def test_info_metadata(self):
         for name in ENGINES:
             info = engine_lib.engine_info(name)
@@ -105,6 +116,31 @@ class TestBitExactness:
         ref = _as_int(engine_lib.get_engine("reference").binary_mmm(groups, w))
         got = _as_int(engine_lib.get_engine(name).binary_mmm(groups, w))
         assert got.shape == (3, 4, 12)
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    @pytest.mark.parametrize("b,m,n", RAGGED_SHAPES)
+    def test_vmm_prepared_matches_reference(self, name, b, m, n):
+        """Two-phase path: ``prepare`` once, execute against the artifact
+        — bit-identical to the raw-weights path (which delegates through
+        ``prepare``, so this is the contract, not a coincidence)."""
+        if name == "custbinarymap" and b * m * n > 2**21:
+            pytest.skip("row-serial sim materializes (b, n, m); keep it small")
+        rng = np.random.default_rng(b * 7 + m + n)
+        a, w = _signs(rng, (b, m)), _signs(rng, (m, n))
+        eng = engine_lib.get_engine(name)
+        pw = eng.prepare(w)
+        assert (pw.engine, pw.m, pw.n) == (name, m, n)
+        ref = _as_int(engine_lib.get_engine("reference").binary_vmm(a, w))
+        np.testing.assert_array_equal(_as_int(eng.binary_vmm(a, pw)), ref)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    def test_mmm_prepared_matches_reference(self, name):
+        rng = np.random.default_rng(5)
+        groups, w = _signs(rng, (3, 4, 50)), _signs(rng, (50, 12))
+        eng = engine_lib.get_engine(name)
+        ref = _as_int(engine_lib.get_engine("reference").binary_mmm(groups, w))
+        got = _as_int(eng.binary_mmm(groups, eng.prepare(w)))
         np.testing.assert_array_equal(got, ref)
 
     def test_packed_under_jit(self):

@@ -1,0 +1,445 @@
+"""Prepared-weights contract (PR 4): program weights once per engine,
+stream only activations.
+
+Covers the two-phase ``Engine.prepare`` / execute contract across every
+registered backend (bit-exactness vs raw for VMM/MMM, grouped ragged
+tails, plan-bound ``tiled``), the identity-keyed :class:`WeightCache`
+(LRU bound, invalidation on param update, tracer bypass), the tiled
+backend's hoisted host-side placement caches, the serving engine's
+crossbar-programming phase (the regression: ``prepare`` runs once per
+projection at bind time and never during decode ticks), and the cost
+model's one-time programming-energy term.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_lib
+from repro.core.crossbar import CrossbarSpec, OPCM_TILE
+
+ENGINES = engine_lib.list_engines()
+
+
+def _signs(rng, shape):
+    return jnp.asarray(rng.choice(np.array([-1.0, 1.0], np.float32), size=shape))
+
+
+def _as_int(x):
+    return np.asarray(x).astype(np.int64)
+
+
+def _operands(b=6, m=100, n=30, seed=0):
+    rng = np.random.default_rng(seed)
+    return _signs(rng, (b, m)), _signs(rng, (m, n))
+
+
+# ---------------------------------------------------------------------------
+# The two-phase contract
+# ---------------------------------------------------------------------------
+
+
+class TestPreparedContract:
+    @pytest.mark.parametrize("name", ENGINES)
+    def test_artifact_metadata_and_idempotence(self, name):
+        _, w = _operands()
+        eng = engine_lib.get_engine(name)
+        pw = eng.prepare(w)
+        assert (pw.engine, pw.m, pw.n) == (name, 100, 30)
+        hash((pw.engine, pw.m, pw.n, pw.aux))  # aux must be hashable (jit static)
+        assert eng.prepare(pw) is pw  # idempotent passthrough
+
+    def test_wrong_engine_rejected(self):
+        _, w = _operands()
+        pw = engine_lib.get_engine("packed").prepare(w)
+        with pytest.raises(ValueError, match="programmed for engine"):
+            engine_lib.get_engine("wdm").binary_vmm(_operands()[0], pw)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    def test_prepared_is_jit_argument(self, name):
+        """The artifact is a registered pytree: it crosses jit boundaries
+        as an ordinary operand (how serving passes programmed params)."""
+        a, w = _operands()
+        eng = engine_lib.get_engine(name)
+        pw = eng.prepare(w)
+        ref = _as_int(a @ w)
+        got = _as_int(jax.jit(eng.binary_vmm)(a, pw))
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("name", ENGINES)
+    @pytest.mark.parametrize("b,k", [(7, 3), (1, 4), (8, 4)])
+    def test_grouped_ragged_prepared_mmm(self, name, b, k):
+        """GroupedEngine passes prepared weights through to the base's
+        ``binary_mmm`` — ragged tails (k does not divide b) included."""
+        a, w = _operands(b=b)
+        grouped = engine_lib.GroupedEngine(engine_lib.get_engine(name), k)
+        pw = grouped.prepare(w)
+        np.testing.assert_array_equal(
+            _as_int(grouped.binary_vmm(a, pw)), _as_int(a @ w)
+        )
+
+    @pytest.mark.parametrize("name", ["wdm", "packed", "tacitmap"])
+    def test_mispaired_artifact_rejected(self, name):
+        """An artifact whose m divides the activation length must raise,
+        not reshape into silent garbage (wdm/packed reshape by pw.m)."""
+        rng = np.random.default_rng(3)
+        a = _signs(rng, (4, 64))
+        pw = engine_lib.get_engine(name).prepare(_signs(rng, (32, 8)))
+        with pytest.raises(ValueError, match="does not match the prepared"):
+            engine_lib.get_engine(name).binary_vmm(a, pw)
+        with pytest.raises(ValueError, match="does not match the prepared"):
+            engine_lib.get_engine(name).binary_mmm(a.reshape(2, 2, 64), pw)
+
+    def test_stacked_artifact_scans(self):
+        """Per-repeat artifacts stack and ``lax.scan`` slices them back
+        — the serving decode's weight-stationary layout."""
+        a, _ = _operands()
+        eng = engine_lib.get_engine("tacitmap")
+        ws = [_operands(seed=s)[1] for s in range(3)]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[eng.prepare(w) for w in ws]
+        )
+
+        def body(carry, pw):
+            return carry, eng.binary_vmm(a, pw)
+
+        _, outs = jax.lax.scan(body, 0.0, stacked)
+        for i, w in enumerate(ws):
+            np.testing.assert_array_equal(_as_int(outs[i]), _as_int(a @ w))
+
+
+class TestPreparedTiled:
+    def test_plan_bound_prepared(self):
+        from repro.mapping import adhoc_layer, allocate
+
+        a, w = _operands(b=5, m=300, n=70)
+        plan = allocate(
+            adhoc_layer(300, 70), spec=CrossbarSpec(rows=128, cols=32),
+            policy="greedy", tile_budget=3,
+        )
+        eng = engine_lib.get_engine("tiled", plan=plan)
+        pw = eng.prepare(w)
+        np.testing.assert_array_equal(_as_int(eng.binary_vmm(a, pw)), _as_int(a @ w))
+
+    def test_spec_mismatch_rejected(self):
+        a, w = _operands()
+        pw = engine_lib.get_engine("tiled", CrossbarSpec(rows=64, cols=64)).prepare(w)
+        with pytest.raises(ValueError, match="re-run prepare"):
+            engine_lib.get_engine("tiled").binary_vmm(a, pw)
+
+    def test_host_index_cache_hoisted(self):
+        """The per-(m, n) placement indices are computed once and
+        memoized — previously rebuilt on every ``binary_vmm`` call."""
+        a, w = _operands()
+        eng = engine_lib.get_engine("tiled")
+        eng.binary_vmm(a, w)
+        misses = eng._index_cache.misses
+        eng.binary_vmm(a, w)
+        eng.prepare(w)
+        assert eng._index_cache.misses == misses  # same shape: all hits
+        assert eng._index_cache.hits > 0
+
+    def test_placement_caches_bounded(self):
+        eng = engine_lib.get_engine("tiled")
+        for m in range(8, 8 + 4 * (eng.ADHOC_CACHE_SIZE + 3), 4):
+            eng._indices(m, 8)
+        assert len(eng._adhoc_cache) <= eng.ADHOC_CACHE_SIZE
+        assert len(eng._index_cache) <= eng.ADHOC_CACHE_SIZE
+        assert eng._index_cache.evictions > 0
+        stats = eng.cache_stats()
+        assert {"weight_cache", "adhoc_placements", "placement_indices"} <= set(stats)
+
+
+# ---------------------------------------------------------------------------
+# Weight cache (identity-keyed, bounded)
+# ---------------------------------------------------------------------------
+
+
+class TestWeightCache:
+    def test_hit_and_identity_invalidation(self):
+        a, w = _operands()
+        eng = engine_lib.get_engine("packed")
+        pw1 = eng.prepare_cached(w)
+        pw2 = eng.prepare_cached(w)
+        assert pw1 is pw2
+        assert eng.weight_cache.stats["hits"] == 1
+        # a param update is a NEW array — equal values still miss
+        # (identity keying IS the invalidation rule)
+        w_updated = jnp.array(w)
+        pw3 = eng.prepare_cached(w_updated)
+        assert pw3 is not pw1
+        assert eng.weight_cache.stats["misses"] == 2
+        np.testing.assert_array_equal(
+            _as_int(eng.binary_vmm(a, pw3)), _as_int(eng.binary_vmm(a, pw1))
+        )
+
+    def test_latent_key_invalidation(self):
+        """Keyed on the latent param (as the model layers use it): a new
+        latent with different values yields a fresh, correct artifact."""
+        a, _ = _operands()
+        eng = engine_lib.get_engine("packed")
+        latent1 = jnp.linspace(-1.0, 1.0, 100 * 30).reshape(100, 30)
+        latent2 = -latent1
+        for latent in (latent1, latent2):
+            wb = jnp.where(latent >= 0, 1.0, -1.0)
+            pw = eng.prepare_cached(wb, key=latent)
+            np.testing.assert_array_equal(
+                _as_int(eng.binary_vmm(a, pw)), _as_int(a @ wb)
+            )
+
+    def test_lazy_signs_not_built_on_hit(self):
+        """Binarization passed as a thunk runs only on a miss — a cache
+        hit pays zero weight-side work (the point of the cache)."""
+        a, _ = _operands()
+        eng = engine_lib.get_engine("packed")
+        latent = jnp.linspace(-1.0, 1.0, 100 * 30).reshape(100, 30)
+        calls = {"n": 0}
+
+        def make():
+            calls["n"] += 1
+            return jnp.where(latent >= 0, 1.0, -1.0)
+
+        pw1 = eng.prepare_cached(make, key=latent)
+        pw2 = eng.prepare_cached(make, key=latent)
+        assert pw1 is pw2 and calls["n"] == 1
+        np.testing.assert_array_equal(
+            _as_int(eng.binary_vmm(a, pw1)), _as_int(a @ make())
+        )
+        with pytest.raises(ValueError, match="explicit cache key"):
+            eng.prepare_cached(make)
+
+    def test_lru_bound(self):
+        cache = engine_lib.WeightCache(maxsize=2)
+        arrays = [jnp.zeros((4,)) + i for i in range(3)]
+        pws = [
+            engine_lib.PreparedWeights(engine="x", m=4, n=1, data=a)
+            for a in arrays
+        ]
+        for a, p in zip(arrays, pws):
+            cache.put(a, p)
+        assert len(cache) == 2
+        assert cache.get(arrays[0]) is None      # evicted (oldest)
+        assert cache.get(arrays[2]) is pws[2]
+
+    def test_tracer_bypass(self):
+        """Traced prepares must not leak into the cache (they belong to
+        the trace that created them)."""
+        a, w = _operands()
+        eng = engine_lib.get_engine("packed")
+
+        @jax.jit
+        def f(a, w):
+            return eng.binary_vmm(a, eng.prepare_cached(w))
+
+        np.testing.assert_array_equal(_as_int(f(a, w)), _as_int(a @ w))
+        np.testing.assert_array_equal(_as_int(f(a, w)), _as_int(a @ w))
+        assert len(eng.weight_cache) == 0
+
+    def test_lru_counters(self):
+        lru = engine_lib.LRUCache(maxsize=2)
+        lru.put("a", 1)
+        lru.put("b", 2)
+        assert lru.get("a") == 1
+        lru.put("c", 3)  # evicts "b" (LRU)
+        assert lru.get("b") is None
+        assert lru.stats == {
+            "size": 2, "maxsize": 2, "hits": 1, "misses": 1, "evictions": 1,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Serving: the crossbar-programming phase
+# ---------------------------------------------------------------------------
+
+
+def _serving_fixture():
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_lib
+
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, (6,), dtype=np.int32) for _ in range(3)
+    ]
+    return cfg, params, prompts
+
+
+class TestServingProgramming:
+    N_PROJ = 7  # attn q/k/v/o + ffn w1/w3/w2 per layer slot
+
+    def test_prepare_once_per_projection_across_ticks(self, monkeypatch):
+        """THE regression this PR exists for: raw-weight ``prepare`` runs
+        exactly once per projection instance at engine bind, and never
+        again across N decode ticks (pass-through validation of an
+        already-prepared artifact is not programming and not counted)."""
+        from repro.serving.engine import Request, ServingEngine
+
+        calls = {"n": 0}
+        orig = engine_lib.WDMEngine.prepare
+
+        def counting(self, w):
+            if not isinstance(w, engine_lib.PreparedWeights):
+                calls["n"] += 1
+            return orig(self, w)
+
+        monkeypatch.setattr(engine_lib.WDMEngine, "prepare", counting)
+        cfg, params, prompts = _serving_fixture()
+        se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="wdm")
+        expected = cfg.n_repeats * self.N_PROJ
+        assert calls["n"] == expected
+        assert se.stats["programmed"] == expected
+        assert se.stats["program_s"] > 0
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        se.run_to_completion()
+        assert se.stats["ticks"] >= 5
+        assert calls["n"] == expected  # zero weight-side programming per tick
+
+    @pytest.mark.parametrize("name", ["wdm", "packed", "tiled"])
+    def test_generations_prepared_vs_raw_vs_reference(self, name):
+        from repro.serving.engine import Request, ServingEngine
+
+        cfg, params, prompts = _serving_fixture()
+
+        def gen(engine, prepared=True):
+            se = ServingEngine(
+                cfg, params, max_batch=2, max_len=32,
+                engine=engine, prepare_weights=prepared,
+            )
+            for i, p in enumerate(prompts):
+                se.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+            return {r.rid: tuple(r.generated) for r in se.run_to_completion()}
+
+        ref = gen(None)
+        assert gen(name, True) == gen(name, False) == ref
+
+    def test_programmed_params_replace_latent_weights(self):
+        from repro.models import lm as lm_lib
+
+        cfg, params, _ = _serving_fixture()
+        eng = engine_lib.get_engine("wdm")
+        programmed, n = lm_lib.program_weights(params, cfg, eng)
+        assert n == cfg.n_repeats * self.N_PROJ
+        proj = programmed["blocks"]["slot0"]["attn"]["q"]
+        assert "w" not in proj  # the artifact replaces the latent weights
+        assert isinstance(proj["prepared"], engine_lib.PreparedWeights)
+        assert proj["alpha"].shape == (cfg.n_repeats,)
+        # input pytree not mutated
+        assert "w" in params["blocks"]["slot0"]["attn"]["q"]
+
+    def test_program_weights_noop_without_engine_or_bnn(self):
+        from repro.models import lm as lm_lib
+
+        cfg, params, _ = _serving_fixture()
+        assert lm_lib.program_weights(params, cfg, None) == (params, 0)
+        cfg_fp = dataclasses.replace(cfg, quant="none")
+        eng = engine_lib.get_engine("wdm")
+        assert lm_lib.program_weights(params, cfg_fp, eng) == (params, 0)
+
+    def test_programmed_params_without_engine_fail_clearly(self):
+        """Programmed params carry only the artifact; using them on a
+        path that needs the latent weights must name the reason, not
+        crash with a NoneType error deep inside the scan."""
+        from repro.models import lm as lm_lib
+
+        cfg, params, prompts = _serving_fixture()
+        programmed, _ = lm_lib.program_weights(
+            params, cfg, engine_lib.get_engine("wdm")
+        )
+        tokens = jnp.asarray(prompts[0])[None, :]
+        with pytest.raises(ValueError, match="programmed for engine 'wdm'"):
+            lm_lib.prefill(programmed, tokens, cfg)  # no engine bound
+
+    def test_minimal_third_party_engine_served_raw(self):
+        """A registered backend implementing only the pre-PR-4 protocol
+        (no ``prepare``) must serve unprogrammed, not crash at bind."""
+        from repro.serving.engine import Request, ServingEngine
+
+        class MinimalEngine:
+            info = engine_lib.ReferenceEngine.info
+            spec = engine_lib.get_engine("reference").spec
+            name = "minimal"
+
+            def binary_vmm(self, a, w):
+                return a @ w
+
+            def binary_mmm(self, groups, w):
+                g, k, m = groups.shape
+                return (groups.reshape(g * k, m) @ w).reshape(g, k, -1)
+
+            def steps_for(self, m, n, b):
+                return b
+
+            def preferred_group_size(self):
+                return 1
+
+        engine_lib.register_engine("minimal", lambda spec=None: MinimalEngine())
+        try:
+            cfg, params, prompts = _serving_fixture()
+            se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="minimal")
+            assert se.stats["programmed"] == 0
+            se.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=3))
+            done = se.run_to_completion()
+            assert len(done) == 1 and len(done[0].generated) == 3
+        finally:
+            engine_lib._REGISTRY.pop("minimal", None)
+
+    def test_serving_cache_stats_exposed(self):
+        from repro.serving.engine import ServingEngine
+
+        cfg, params, _ = _serving_fixture()
+        se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="tiled")
+        stats = se.cache_stats()
+        assert "weight_cache" in stats and "placement_indices" in stats
+        se_ref = ServingEngine(cfg, params, max_batch=2, max_len=32)
+        assert se_ref.cache_stats() == {}
+
+
+# ---------------------------------------------------------------------------
+# Cost model: one-time programming energy, separate from readout
+# ---------------------------------------------------------------------------
+
+
+class TestProgrammingCost:
+    def _layer(self, m=512, n=512):
+        from repro.core.networks import LayerDesc
+
+        return LayerDesc(name="fc", m=m, n=n, positions=1, binary=True)
+
+    def test_energy_scales_with_cells(self):
+        from repro.core import costmodel as cm
+
+        small = cm.layer_programming_cost(cm.TACITMAP_EPCM, self._layer(128, 128))
+        big = cm.layer_programming_cost(cm.TACITMAP_EPCM, self._layer(256, 256))
+        assert small.cells == 2 * 128 * 128  # complement pair per weight
+        assert big.energy_pj == pytest.approx(4 * small.energy_pj)
+        assert small.energy_pj > 0 and small.time_ns > 0
+
+    def test_write_cost_separate_from_readout(self):
+        """The programming term must NOT leak into per-tick readout
+        pricing — raising the write energy leaves tick energy unchanged
+        (that separation is the amortization story)."""
+        from repro.core import costmodel as cm
+
+        layer = self._layer()
+        base = cm.grouped_decode_tick(cm.EINSTEINBARRIER, layer, 16)
+        expensive = dataclasses.replace(cm.EINSTEINBARRIER, e_cell_write_pj=1e6)
+        assert cm.grouped_decode_tick(expensive, layer, 16) == base
+        assert cm.layer_programming_cost(expensive, layer).energy_pj > \
+            cm.layer_programming_cost(cm.EINSTEINBARRIER, layer).energy_pj
+
+    def test_break_even_and_network_totals(self):
+        from repro.core import costmodel as cm
+        from repro.core.networks import NETWORKS
+
+        ticks = cm.programming_break_even_ticks(cm.EINSTEINBARRIER, self._layer(), 16)
+        assert ticks > 0
+        net = NETWORKS["MLP-S"] if "MLP-S" in NETWORKS else next(iter(NETWORKS.values()))
+        total = cm.network_programming_cost(cm.TACITMAP_EPCM, net)
+        assert total.cells >= sum(
+            (2 * l.m if l.binary else l.m) * l.n for l in net.layers
+        ) and total.energy_pj > 0
