@@ -1,0 +1,147 @@
+"""Compiler one-call API smoke — the CI gate for ``repro.compiler``.
+
+One :class:`repro.compiler.HardwareTarget` per registered execution
+style, each run through the full ``compile -> prefill -> decode ->
+serve`` round trip on the smoke LM and required to generate
+byte-identically to the reference target: the one-call pipeline (map ->
+program -> execute) must be semantically invisible, exactly like the
+engines and K-grouping it wires together. Also exercises the
+price-only path (``compile(cfg, None, target).price()``) so the DSE
+seam can't silently rot.
+
+    PYTHONPATH=src python -m benchmarks.compiler [--smoke]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def roundtrip_sweep(targets, *, n_requests, prompt_len, gen):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compiler as compiler_lib
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_lib
+    from repro.serving import Request
+
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, (prompt_len,), dtype=np.int32)
+        for _ in range(n_requests)
+    ]
+    batch_tokens = jnp.stack([jnp.asarray(p) for p in prompts])
+
+    rows = []
+    for target in targets:
+        t0 = time.perf_counter()
+        compiled = compiler_lib.compile(cfg, params, target)
+        compile_s = time.perf_counter() - t0
+
+        # direct drive: prefill + one decode step (graft the prompt KV
+        # into a serving-capacity cache, same as launch/serve.py)
+        logits, pre = compiled.prefill(batch_tokens)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        caches = compiled.graft_prefill_caches(
+            compiled.init_cache(n_requests, prompt_len + gen + 2), pre
+        )
+        step_logits, _ = compiled.decode_step(
+            first, jnp.asarray(prompt_len, jnp.int32), caches
+        )
+        second = jnp.argmax(step_logits, axis=-1)
+
+        # serving drive: continuous batching through the same artifact
+        se = compiled.serve(max_batch=2, max_len=prompt_len + gen + 2)
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
+        gens = {r.rid: tuple(r.generated) for r in se.run_to_completion()}
+
+        rows.append({
+            "target": target.describe(),
+            "engine": target.engine,
+            "policy": target.mapping_policy or "-",
+            "k": se.group_k,
+            "programmed": compiled.programmed,
+            "compile_ms": compile_s * 1e3,
+            "plan_tiles": compiled.plan.n_tiles if compiled.plan else None,
+            "direct": [int(t) for t in first.tolist()] + [int(t) for t in second.tolist()],
+            "gen": gens,
+        })
+    return rows
+
+
+def run(smoke: bool = False) -> tuple[int, dict]:
+    from repro.compiler import HardwareTarget
+    from repro.core import engine as engine_lib
+
+    targets = [
+        HardwareTarget(),                                   # reference
+        HardwareTarget(engine="wdm", group_size=2),         # native MMM
+        HardwareTarget(engine="packed"),                    # Pallas kernel
+        HardwareTarget(engine="tiled", mapping_policy="greedy"),  # plan-driven
+    ]
+    if not smoke:
+        targets += [
+            HardwareTarget(engine=name)
+            for name in engine_lib.list_engines()
+            if name not in {t.engine for t in targets}
+        ]
+        targets.append(HardwareTarget(engine="tiled", mapping_policy="greedy",
+                                      prepare_weights=False))
+    sizes = dict(n_requests=2, prompt_len=5, gen=3)
+    rows = roundtrip_sweep(targets, **sizes)
+
+    print("\n== compiler one-call round trip (compile -> prefill/decode/serve, "
+          f"smoke LM, {sizes['n_requests']} requests) ==")
+    print(f"{'engine':>14s} {'policy':>13s} {'K':>3s} {'progd':>6s} "
+          f"{'tiles':>6s} {'compile_ms':>11s} {'exact':>6s}")
+    ref = rows[0]
+    exact = True
+    for r in rows:
+        ok = r["gen"] == ref["gen"] and r["direct"] == ref["direct"]
+        exact &= ok
+        tiles = "-" if r["plan_tiles"] is None else str(r["plan_tiles"])
+        print(f"{r['engine']:>14s} {r['policy']:>13s} {r['k']:3d} "
+              f"{r['programmed']:6d} {tiles:>6s} {r['compile_ms']:11.1f} "
+              f"{str(ok):>6s}")
+    print(f"bit-exact across the target grid: {exact}")
+
+    # the price-only compilation the DSE sweep stands on
+    from repro import compiler as compiler_lib
+    from repro.configs import get_smoke_config
+
+    price = compiler_lib.compile(
+        get_smoke_config("qwen1.5-0.5b"), None,
+        HardwareTarget(engine="tiled", mapping_policy="greedy"),
+    ).price()
+    print(price.summary())
+    priced = price.n_tiles > 0 and price.latency_s > 0 and price.break_even_ticks > 0
+
+    rc = 0 if (exact and priced) else 1
+    payload = {
+        "targets": [
+            {k: v for k, v in r.items() if k not in ("gen", "direct")}
+            for r in rows
+        ],
+        "bit_exact": exact,
+        "price_only_ok": priced,
+    }
+    return rc, payload
+
+
+def main(smoke: bool = False) -> int:
+    return run(smoke=smoke)[0]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized grid")
+    args = ap.parse_args()
+    raise SystemExit(main(smoke=args.smoke))

@@ -1,72 +1,172 @@
-"""Design-space exploration of oPCM VCores (paper §VI-C future work).
+"""Design-space exploration — a hardware-target grid priced through
+``CompiledModel.price()`` (the ROADMAP's "Mapping DSE" open item,
+paper §VI-C future work).
 
-The paper evaluates ONE fixed configuration (256x256 tiles, K=16,
-fixed laser) citing limited component specs. The cost model makes the
-sweep cheap: crossbar geometry x WDM capacity x laser power, reporting
-per-image latency, energy, and the transmitter/TIA overhead share —
-the pareto the paper asks for.
+The paper evaluates ONE fixed configuration (256x256 tiles, K=16, one
+mapping); the compiler API makes the sweep one loop: every grid point
+is a :class:`repro.compiler.HardwareTarget` — allocator policy x
+physical tile budget x WDM capacity K on oPCM tiles — compiled
+*price-only* (no params) against the LM serving target and priced in
+one report (plan schedule + one-time programming + per-tick readout).
+The output is the latency-vs-area pareto (area = provisioned tiles:
+a tile budget below the block count forces co-residency, and the
+plan's ``steps_per_vector`` serialization surfaces directly in
+latency), written as ``BENCH_dse.json`` by ``benchmarks/run.py --out``
+— the third perf-trajectory artifact in CI.
 
-    PYTHONPATH=src python -m benchmarks.dse
+    PYTHONPATH=src python -m benchmarks.dse [--smoke] [--mapping-policy P]
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import costmodel as cm
-from repro.core.networks import NETWORKS
+ARCH = "qwen1.5-0.5b"
 
 
-def explore(net_name: str = "CNN-M"):
-    net = NETWORKS[net_name]
+def target_grid(smoke: bool, policies=None, budgets=None):
+    """The swept HardwareTargets: policy x tile budget x WDM K."""
+    from repro.core.crossbar import OPCM_TILE
+    from repro.compiler import HardwareTarget
+    from repro.configs import get_config
+    from repro.mapping import POLICIES, required_tiles
+
+    cfg = get_config(ARCH)
+    need = required_tiles(cfg, OPCM_TILE)
+    policies = tuple(policies or POLICIES)
+    ks = (4, 16) if smoke else (4, 8, 16, 32)
+    if budgets is None:
+        budgets = (None, 64) if smoke else (None, max(1, need // 2), 64)
+    targets = []
+    for policy in policies:
+        for budget in budgets:
+            for k in ks:
+                spec = dataclasses.replace(OPCM_TILE, wdm_k=k)
+                targets.append(HardwareTarget(
+                    engine="tiled", spec=spec, mapping_policy=policy,
+                    tile_budget=budget,
+                ))
+    return cfg, targets
+
+
+def explore(smoke: bool, policies=None, budgets=None) -> list[dict]:
+    """Compile + price every target in the grid (params-free)."""
+    from repro import compiler as compiler_lib
+
+    cfg, targets = target_grid(smoke, policies, budgets)
     rows = []
-    for size in (128, 256, 512):
-        for k in (4, 8, 16, 32):
-            for laser in (100.0, 200.0, 400.0):
-                tile = dataclasses.replace(
-                    cm.EINSTEINBARRIER.tile, rows=size, cols=size, wdm_k=k
-                )
-                p = dataclasses.replace(cm.EINSTEINBARRIER, tile=tile, p_laser_mw=laser)
-                lat = cm.network_latency_s(p, net)
-                en = cm.network_energy_j(p, net)
-                tx_mw = cm.transmitter_power_mw(p)
-                rows.append({
-                    "size": size, "k": k, "laser_mw": laser,
-                    "latency_us": lat * 1e6, "energy_uj": en * 1e6,
-                    "tx_power_w": tx_mw / 1e3,
-                })
+    for target in targets:
+        price = compiler_lib.compile(cfg, None, target).price()
+        rows.append({
+            "policy": target.mapping_policy,
+            "tile_budget": target.tile_budget,
+            "k": target.spec.wdm_k,
+            "n_tiles": price.n_tiles,            # the area axis
+            "utilization": round(price.utilization, 4),
+            "binary_steps": price.binary_steps,
+            "latency_us": price.latency_s * 1e6,
+            "energy_uj": price.energy_j * 1e6,
+            "program_uj": price.programming_uj,
+            "program_us": price.programming_us,
+            "tick_us": price.tick_latency_ns * 1e-3,
+            "break_even_ticks": price.break_even_ticks,
+            "design": price.design,
+        })
     return rows
 
 
-def pareto(rows):
-    """3-objective front: latency, energy, AND transmitter wall power —
-    Eq. 3 grows ~K*M, so 'fastest' configs carry real power budgets."""
-    keys = ("latency_us", "energy_uj", "tx_power_w")
+def pareto(rows, keys=("latency_us", "n_tiles")):
+    """Non-dominated front — by default latency vs area (tiles)."""
 
     def dominates(o, r):
         return all(o[k] <= r[k] for k in keys) and any(o[k] < r[k] for k in keys)
 
     out = [r for r in rows if not any(dominates(o, r) for o in rows)]
-    return sorted(out, key=lambda r: r["latency_us"])
+    return sorted(out, key=lambda r: r[keys[0]])
 
 
-def main() -> int:
-    rows = explore()
+def run(smoke: bool = False, policies=None, budgets=None) -> tuple[int, dict]:
+    rows = explore(smoke, policies, budgets)
     front = pareto(rows)
-    print("\n== oPCM VCore design-space exploration (CNN-M) ==")
-    print(f"{len(rows)} design points; pareto front (latency vs energy):")
-    print(f"{'tile':>6s} {'K':>4s} {'laser':>7s} {'lat_us':>8s} {'E_uJ':>8s} {'tx_W':>6s}")
+
+    print(f"\n== target-grid DSE ({ARCH} on oPCM tiles, "
+          f"policy x tile budget x K, {len(rows)} priced targets) ==")
+    print(f"{'policy':>13s} {'budget':>7s} {'K':>3s} {'tiles':>7s} {'util':>6s} "
+          f"{'lat_us':>9s} {'E_uJ':>8s} {'tick_us':>8s} {'brk_evn':>8s}")
+    for r in rows:
+        budget = "-" if r["tile_budget"] is None else str(r["tile_budget"])
+        print(f"{r['policy']:>13s} {budget:>7s} {r['k']:3d} {r['n_tiles']:7d} "
+              f"{r['utilization']:6.2f} {r['latency_us']:9.2f} "
+              f"{r['energy_uj']:8.3f} {r['tick_us']:8.2f} "
+              f"{r['break_even_ticks']:8.0f}")
+
+    print("\nlatency-vs-area pareto front (area = provisioned tiles):")
     for r in front:
-        print(f"{r['size']:4d}^2 {r['k']:4d} {r['laser_mw']:5.0f}mW "
-              f"{r['latency_us']:8.3f} {r['energy_uj']:8.3f} {r['tx_power_w']:6.1f}")
-    # structural sanity: bigger K never hurts latency; bigger tiles
-    # amortize edge layers but raise transmitter power (Eq. 3 ~ K*M)
-    base = [r for r in rows if r["size"] == 256 and r["laser_mw"] == 200.0]
-    lat_by_k = {r["k"]: r["latency_us"] for r in base}
-    ok = lat_by_k[32] <= lat_by_k[16] <= lat_by_k[8] <= lat_by_k[4]
-    print(f"  [{'PASS' if ok else 'FAIL'}] latency monotone non-increasing in K (fixed tile)")
-    return 0 if ok else 1
+        budget = "-" if r["tile_budget"] is None else str(r["tile_budget"])
+        print(f"  {r['policy']:>13s} budget={budget:>5s} K={r['k']:2d}: "
+              f"{r['latency_us']:.2f} us @ {r['n_tiles']} tiles")
+
+    # structural gates: the sweep must be a real design space —
+    # (a) enough priced points for a trajectory (the unrestricted grid
+    # CI records needs >= 12; a --mapping-policy/--tile-budget-
+    # restricted sweep just needs every requested target priced),
+    # (b) WDM K divides the stream (latency monotone non-increasing in
+    # K at fixed policy/budget), (c) shrinking the tile pool never
+    # speeds a fixed policy up (co-residency only serializes)
+    min_points = 12 if (policies is None and budgets is None) else 1
+    enough = len(rows) >= min_points
+    by_axis: dict[tuple, dict[int, float]] = {}
+    for r in rows:
+        by_axis.setdefault((r["policy"], r["tile_budget"]), {})[r["k"]] = r["latency_us"]
+    k_monotone = all(
+        all(lat[a] >= lat[b] - 1e-9 for a, b in zip(sorted(lat), sorted(lat)[1:]))
+        for lat in by_axis.values()
+    )
+    by_k: dict[tuple, dict] = {}
+    for r in rows:
+        by_k.setdefault((r["policy"], r["k"]), {})[r["tile_budget"]] = r["latency_us"]
+    budget_costs = all(
+        all(lat[b] >= lat[None] - 1e-9 for b in lat if b is not None)
+        for lat in by_k.values() if None in lat
+    )
+    ok = enough and k_monotone and budget_costs and bool(front)
+    print(f"\n[{'PASS' if enough else 'FAIL'}] >= {min_points} priced target "
+          f"points ({len(rows)})")
+    print(f"[{'PASS' if k_monotone else 'FAIL'}] latency monotone non-increasing in K")
+    print(f"[{'PASS' if budget_costs else 'FAIL'}] tile budgets never beat dedicated tiles")
+    payload = {"arch": ARCH, "targets": rows, "pareto": front, "ok": ok}
+    return (0 if ok else 1), payload
+
+
+def main(smoke: bool = False, policies=None, budgets=None) -> int:
+    return run(smoke=smoke, policies=policies, budgets=budgets)[0]
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    import argparse
+
+    from repro.compiler import add_target_args, target_from_args
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="12-point CI grid")
+    # shared target surface; --mapping-policy/--tile-budget restrict the
+    # swept axes
+    add_target_args(ap, default_engine="tiled")
+    args = ap.parse_args()
+    try:
+        tgt = target_from_args(args)
+    except Exception as e:
+        ap.error(str(e))
+    # no silent knob drops: flags the grid does not consume are rejected
+    if tgt.engine != "tiled":
+        ap.error("the DSE grid prices layer->tile plans; only the "
+                 "plan-driven 'tiled' engine applies")
+    if tgt.group_size or not tgt.prepare_weights:
+        ap.error("--group-size/--raw-weights do not apply: the grid "
+                 "sweeps WDM K per target spec and prices without "
+                 "executing")
+    raise SystemExit(main(
+        smoke=args.smoke,
+        policies=(tgt.mapping_policy,) if tgt.mapping_policy else None,
+        budgets=(tgt.tile_budget,) if tgt.tile_budget is not None else None,
+    ))

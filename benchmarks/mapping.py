@@ -12,11 +12,14 @@ Three views of the `repro.mapping` subsystem:
 * **Measured**: the plan-driven ``tiled`` engine executes a binarized
   matmul under every policy and must be bit-exact against every other
   registered backend (the sweep fails otherwise) — placement permutes
-  tile order, never the math.
-* **Serving**: a smoke LM served end-to-end with ``engine="tiled"`` and
-  a compiled plan must generate byte-identically to ``reference``
-  (plan-driven execution is semantically invisible, like every other
-  backend).
+  tile order, never the math. The candidate axis is a
+  :class:`repro.compiler.HardwareTarget` per (engine | tiled x policy),
+  resolved through the same backend resolution ``compile()`` runs.
+* **Serving**: a smoke LM compiled onto a
+  ``HardwareTarget(engine="tiled", mapping_policy="greedy")`` and
+  served through ``compile(...).serve(...)`` must generate
+  byte-identically to the reference target (plan-driven execution is
+  semantically invisible, like every other backend).
 
 ``run(smoke)`` returns the rows as JSON-ready data for
 ``benchmarks/run.py --out``.
@@ -68,6 +71,8 @@ def modeled_sweep(smoke: bool) -> list[dict]:
 def measured_sweep(smoke: bool) -> tuple[list[dict], bool]:
     import numpy as np
 
+    from repro import compiler as compiler_lib
+    from repro.compiler import HardwareTarget
     from repro.core import engine as engine_lib
     from repro.mapping import POLICIES
 
@@ -80,10 +85,18 @@ def measured_sweep(smoke: bool) -> tuple[list[dict], bool]:
     baselines = ("reference", "tacitmap", "wdm") if smoke else tuple(
         e for e in engine_lib.list_engines() if e != "tiled"
     )
-    candidates = [(name, "-", engine_lib.get_engine(name)) for name in baselines]
-    candidates += [
-        ("tiled", policy, engine_lib.get_engine("tiled", policy=policy))
+    # the candidate axis is a HardwareTarget per (engine | tiled x
+    # policy); resolve_engine is the same backend resolution compile()
+    # runs (reference resolves to the plain-jnp path -> the engine)
+    grid = [(name, "-", HardwareTarget(engine=name)) for name in baselines]
+    grid += [
+        ("tiled", policy, HardwareTarget(engine="tiled", mapping_policy=policy))
         for policy in POLICIES
+    ]
+    candidates = [
+        (name, policy,
+         compiler_lib.resolve_engine(t) or engine_lib.get_engine("reference"))
+        for name, policy, t in grid
     ]
 
     rows, exact = [], True
@@ -109,30 +122,32 @@ def serving_roundtrip(smoke: bool) -> tuple[dict, bool]:
     import jax
     import numpy as np
 
+    from repro import compiler as compiler_lib
+    from repro.compiler import HardwareTarget
     from repro.configs import get_smoke_config
-    from repro.mapping import compile_plan
     from repro.models import lm as lm_lib
-    from repro.serving import Request, ServingEngine
+    from repro.serving import Request
 
     cfg = dataclasses.replace(get_smoke_config("qwen1.5-0.5b"), quant="bnn")
     params = lm_lib.init_params(jax.random.key(0), cfg)
     rng = np.random.default_rng(0)
     n_req, gen = (2, 2) if smoke else (4, 4)
     prompts = [rng.integers(1, cfg.vocab_size, (6,), dtype=np.int32) for _ in range(n_req)]
-    plan = compile_plan(cfg, policy="greedy")
 
-    def generations(engine: str | None, mapping_plan=None):
-        se = ServingEngine(
-            cfg, params, max_batch=2, max_len=16,
-            engine=engine, mapping_plan=mapping_plan,
-        )
+    def generations(target: HardwareTarget):
+        compiled = compiler_lib.compile(cfg, params, target)
+        se = compiled.serve(max_batch=2, max_len=16)
         for i, p in enumerate(prompts):
             se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
-        return {r.rid: tuple(r.generated) for r in se.run_to_completion()}
+        return {r.rid: tuple(r.generated) for r in se.run_to_completion()}, compiled
 
-    tiled = generations("tiled", mapping_plan=plan)
-    ref = generations("reference")
+    # the one-call pipeline compiles the greedy plan itself
+    tiled, compiled = generations(
+        HardwareTarget(engine="tiled", mapping_policy="greedy")
+    )
+    ref, _ = generations(HardwareTarget())
     exact = tiled == ref
+    plan = compiled.plan
     return {
         "plan_tiles": plan.n_tiles,
         "plan_k": plan.preferred_group_size(),

@@ -12,7 +12,9 @@ Sections:
   4. wdm_sweep      — WDM capacity K sweep (Eq. 2/3 overheads vs
                       step-count win — the paper's §IV-B trade-off)
   5. multilevel     — multi-level PCM cells vs noise (§VI-C future work)
-  6. dse            — oPCM VCore design-space pareto (§VI-C future work)
+  6. dse            — target-grid DSE: mapping policy x tile budget x
+                      WDM K priced through CompiledModel.price()
+                      (latency-vs-area pareto, §VI-C future work)
   7. roofline       — §Roofline table from dry-run artifacts (if present)
   8. serving_groups — serving K-group batched decode throughput sweep
                       (K x engine, measured + modeled)
@@ -22,12 +24,16 @@ Sections:
  10. serving_latency — prepared-vs-unprepared decode tick wall time per
                       engine x K + modeled one-time programming cost
                       (the serving-latency perf-trajectory point)
+ 11. compiler       — one-call hardware-compilation round trip
+                      (compile -> prefill/decode/serve bit-exactness
+                      per target + the price-only DSE seam)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
 CI-sized work. ``--out PATH`` writes the structured section results as
 JSON (sections that only print report their exit code), so CI keeps the
-perf trajectory as an artifact.
+perf trajectory as an artifact (``BENCH_mapping.json``,
+``BENCH_serving.json``, and the DSE target grid ``BENCH_dse.json``).
 """
 
 from __future__ import annotations
@@ -45,6 +51,7 @@ SECTIONS = (
     "serving_groups",
     "mapping",
     "serving_latency",
+    "compiler",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -110,6 +117,7 @@ def main(argv: list[str] | None = None) -> int:
     import json
 
     from benchmarks import (
+        compiler,
         dse,
         kernel_bench,
         mapping,
@@ -139,7 +147,8 @@ def main(argv: list[str] | None = None) -> int:
     if "multilevel" in wanted:
         rc |= record("multilevel", multilevel.main())
     if "dse" in wanted:
-        rc |= record("dse", dse.main())
+        d_rc, payload = dse.run(smoke=args.smoke)
+        rc |= record("dse", d_rc, payload)
     if "roofline" in wanted:
         if glob.glob("runs/dryrun/*.json"):
             rc |= record("roofline", roofline.main())
@@ -153,6 +162,9 @@ def main(argv: list[str] | None = None) -> int:
     if "serving_latency" in wanted:
         s_rc, payload = serving_latency.run(smoke=args.smoke)
         rc |= record("serving_latency", s_rc, payload)
+    if "compiler" in wanted:
+        c_rc, payload = compiler.run(smoke=args.smoke)
+        rc |= record("compiler", c_rc, payload)
 
     if args.out:
         doc = {"smoke": args.smoke, "rc": rc, "sections": results}

@@ -1,17 +1,21 @@
-"""Serving K-group batching sweep — K × engine.
+"""Serving K-group batching sweep — hardware targets across K × engine.
 
 Two views of the same refactor (serving/engine.py BatchPlanner):
 
-* **Measured**: a real ``ServingEngine`` run per (engine, K) on the
+* **Measured**: one :class:`repro.compiler.HardwareTarget` per
+  (engine, K), compiled and served (``compile(...).serve(...)``) on the
   smoke LM. Reports the decode tick cost in crossbar terms — K-groups
   issued (one ``binary_mmm`` per projection per tick) vs slot-at-a-time
   steps — plus ragged-tail idle lanes and directional CPU tok/s. The
   `wdm` engine's group count drops ~K× vs K=1 (PR-1 slot-at-a-time
   decode) while every engine stays bit-exact: the sweep fails if any
-  (engine, K) generation diverges from the reference engine's.
+  target's generation diverges from the reference target's.
 * **Modeled**: cost-model ``grouped_decode_tick`` latency/energy across
   K for EinsteinBarrier vs TacitMap-ePCM — the paper's K-way latency
   division showing up in serving-tick numbers.
+
+    PYTHONPATH=src python -m benchmarks.serving_groups [--smoke] \
+        [--engine wdm] [--group-size 4]
 """
 
 from __future__ import annotations
@@ -20,13 +24,14 @@ import dataclasses
 import time
 
 
-def measured_sweep(engines, ks, *, max_batch, n_requests, prompt_len, gen):
+def measured_sweep(targets, *, max_batch, n_requests, prompt_len, gen):
     import jax
     import numpy as np
 
+    from repro import compiler as compiler_lib
     from repro.configs import get_smoke_config
     from repro.models import lm as lm_lib
-    from repro.serving import Request, ServingEngine
+    from repro.serving import Request
 
     cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
     params = lm_lib.init_params(jax.random.key(0), cfg)
@@ -37,33 +42,31 @@ def measured_sweep(engines, ks, *, max_batch, n_requests, prompt_len, gen):
     ]
 
     rows = []
-    for name in engines:
-        for k in ks:
-            se = ServingEngine(
-                cfg, params, max_batch=max_batch, max_len=prompt_len + gen + 2,
-                engine=name, group_size=k,
-            )
-            for i, p in enumerate(prompts):
-                se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
-            t0 = time.perf_counter()
-            done = se.run_to_completion()
-            wall = time.perf_counter() - t0
-            s = se.stats
-            rows.append({
-                "engine": name,
-                "k": se.group_k,
-                "ticks": s["ticks"],
-                "decoded": s["decoded"],
-                "mmm_groups": s["mmm_groups"],
-                # a measured MMM reduction only exists when a registry
-                # backend executed (reference serves plain jnp: no calls)
-                "reduction": (
-                    s["decoded"] / s["mmm_groups"] if s["mmm_groups"] else None
-                ),
-                "pad_lanes": s["pad_lanes"],
-                "tok_s": s["decoded"] / max(wall, 1e-9),
-                "gen": {r.rid: tuple(r.generated) for r in done},
-            })
+    for target in targets:
+        se = compiler_lib.compile(cfg, params, target).serve(
+            max_batch=max_batch, max_len=prompt_len + gen + 2
+        )
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
+        t0 = time.perf_counter()
+        done = se.run_to_completion()
+        wall = time.perf_counter() - t0
+        s = se.stats
+        rows.append({
+            "engine": target.engine,
+            "k": se.group_k,
+            "ticks": s["ticks"],
+            "decoded": s["decoded"],
+            "mmm_groups": s["mmm_groups"],
+            # a measured MMM reduction only exists when a registry
+            # backend executed (reference serves plain jnp: no calls)
+            "reduction": (
+                s["decoded"] / s["mmm_groups"] if s["mmm_groups"] else None
+            ),
+            "pad_lanes": s["pad_lanes"],
+            "tok_s": s["decoded"] / max(wall, 1e-9),
+            "gen": {r.rid: tuple(r.generated) for r in done},
+        })
     return rows
 
 
@@ -78,22 +81,28 @@ def modeled_sweep(ks):
     return layer, out
 
 
-def main(smoke: bool = False) -> int:
+def main(smoke: bool = False, engines=None, ks=None) -> int:
+    from repro.compiler import HardwareTarget
     from repro.core import engine as engine_lib
 
     if smoke:
         # two full waves through the pool: the K=1 vs K=4 comparison is
         # clean (~K x); ragged tails are exercised by the full mode and
         # tests/test_serving_groups.py
-        engines = ("reference", "wdm", "packed")
-        ks = (1, 4)
+        engines = engines or ("reference", "wdm", "packed")
+        ks = ks or (1, 4)
         sizes = dict(max_batch=4, n_requests=8, prompt_len=6, gen=3)
     else:
-        engines = tuple(engine_lib.list_engines())
-        ks = (1, 2, 4)
+        engines = engines or tuple(engine_lib.list_engines())
+        ks = ks or (1, 2, 4)
         sizes = dict(max_batch=4, n_requests=6, prompt_len=8, gen=6)
 
-    rows = measured_sweep(engines, ks, **sizes)
+    # the sweep axis IS the target: one HardwareTarget per (engine, K)
+    targets = [
+        HardwareTarget(engine=name, group_size=k)
+        for name in engines for k in ks
+    ]
+    rows = measured_sweep(targets, **sizes)
 
     print("\n== serving K-group sweep (measured, smoke LM, "
           f"batch={sizes['max_batch']}, {sizes['n_requests']} requests) ==")
@@ -105,8 +114,9 @@ def main(smoke: bool = False) -> int:
               f"{r['mmm_groups']:9d} {red} {r['pad_lanes']:5d} "
               f"{r['tok_s']:8.1f}")
 
-    # bit-exactness across the whole grid: K-grouping and backends are
-    # semantically invisible (the registry's contract, served end-to-end)
+    # bit-exactness across the whole target grid: K-grouping and
+    # backends are semantically invisible (the registry's contract,
+    # served end-to-end through the one-call pipeline)
     gens = {(r["engine"], r["k"]): r["gen"] for r in rows}
     ref = next(iter(gens.values()))
     exact = all(g == ref for g in gens.values())
@@ -115,7 +125,7 @@ def main(smoke: bool = False) -> int:
     # PR-1 slot-at-a-time decode (K=1)
     wdm = {r["k"]: r for r in rows if r["engine"] == "wdm"}
     k_win = True
-    if wdm:
+    if wdm and len(wdm) > 1:
         k_max = max(wdm)
         got = wdm[1]["mmm_groups"] / wdm[k_max]["mmm_groups"]
         print(f"wdm decode tick count: {wdm[1]['mmm_groups']} (K=1, slot-at-a-time) "
@@ -137,4 +147,26 @@ def main(smoke: bool = False) -> int:
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    import argparse
+
+    from repro.compiler import add_target_args, target_from_args
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
+    # shared target flags; --engine/--group-size restrict the sweep axes
+    add_target_args(ap, default_engine=None)
+    args = ap.parse_args()
+    try:
+        tgt = target_from_args(args)
+    except Exception as e:
+        ap.error(str(e))
+    # no silent knob drops: the flags this sweep does not consume are
+    # rejected, not accepted-and-ignored
+    if tgt.wants_plan or not tgt.prepare_weights:
+        ap.error("--mapping-policy/--tile-budget/--raw-weights do not apply: "
+                 "this sweep grids engine x K with prepared weights")
+    raise SystemExit(main(
+        smoke=args.smoke,
+        engines=(tgt.engine,) if args.engine else None,
+        ks=(tgt.group_size,) if tgt.group_size else None,
+    ))

@@ -5,12 +5,14 @@ mapping sweeps.
 
 Two views of the PR-4 prepared-weights contract:
 
-* **Measured**: two ``ServingEngine`` runs per (engine, K) on the smoke
-  LM — one with the crossbar-programming phase (default: weights are
-  compiled into the backend's resident form once, decode streams only
-  activations) and one with ``prepare_weights=False`` (the PR-3
-  behaviour: every tick re-runs ``map_weights`` / bit-packing / block
-  gathers per projection inside the decode graph). Reports the median
+* **Measured**: one :class:`repro.compiler.HardwareTarget` per
+  (engine, K), served twice through ``compile(...).serve(...)`` — once
+  with the crossbar-programming phase (default: weights are compiled
+  into the backend's resident form once, decode streams only
+  activations) and once with the same target's
+  ``prepare_weights=False`` (the PR-3 behaviour: every tick re-runs
+  ``map_weights`` / bit-packing / block gathers per projection inside
+  the decode graph). Reports the median
   decode-tick wall time over a full, steady slot pool plus the one-time
   programming wall time. The gate asserts prepared ticks are strictly
   faster for ``packed``/``wdm``/``tiled`` and that both paths decode
@@ -36,13 +38,14 @@ def _timed_step(se) -> float:
     return time.perf_counter() - t0
 
 
-def measured_sweep(engines, ks, *, max_batch, prompt_len, warmup, ticks):
+def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
     import jax
     import numpy as np
 
+    from repro import compiler as compiler_lib
     from repro.configs import get_smoke_config
     from repro.models import lm as lm_lib
-    from repro.serving import Request, ServingEngine
+    from repro.serving import Request
 
     cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
     params = lm_lib.init_params(jax.random.key(0), cfg)
@@ -54,58 +57,55 @@ def measured_sweep(engines, ks, *, max_batch, prompt_len, warmup, ticks):
     budget = warmup + ticks + 2  # slots stay active through the window
 
     rows = []
-    for name in engines:
-        for k in ks:
-            row = {"engine": name, "k": k}
-            # both paths built up-front and their decode ticks timed
-            # INTERLEAVED (prep, raw, prep, raw, ...): the structural
-            # delta is the per-tick weight-side work, and interleaving
-            # cancels machine drift that sequential phases would alias
-            # into the comparison
-            pair = {}
-            for prepared in (True, False):
-                se = ServingEngine(
-                    cfg, params,
-                    max_batch=max_batch,
-                    max_len=prompt_len + budget + 2,
-                    engine=name,
-                    group_size=k,
-                    prepare_weights=prepared,
-                )
-                for i, p in enumerate(prompts):
-                    se.submit(Request(rid=i, prompt=p, max_new_tokens=budget))
-                # first steps admit+prefill+compile; excluded from timing
-                for _ in range(warmup):
-                    se.step()
-                pair["prepared" if prepared else "raw"] = se
-            times: dict[str, list[float]] = {"prepared": [], "raw": []}
-            for _ in range(ticks):
-                times["prepared"].append(_timed_step(pair["prepared"]))
-                times["raw"].append(_timed_step(pair["raw"]))
-            for label, se in pair.items():
-                row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
-            # the robust statistic: each (prepared, raw) tick pair is
-            # adjacent in time, so the per-pair difference cancels drift
-            # and a noise spike only perturbs one pair — the gate pools
-            # these deltas per engine
-            row["paired_deltas_ms"] = [
-                (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
-            ]
-            row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
-            row["programmed"] = pair["prepared"].stats["programmed"]
-            row["program_ms"] = pair["prepared"].stats["program_s"] * 1e3
-            # same admission order both runs: compare per-slot streams
-            gens = {
-                label: {
-                    slot: tuple(r.generated)
-                    for slot, r in enumerate(se.slot_req)
-                    if r is not None
-                }
-                for label, se in pair.items()
+    for target in targets:
+        row = {"engine": target.engine, "k": target.group_size}
+        # both paths built up-front and their decode ticks timed
+        # INTERLEAVED (prep, raw, prep, raw, ...): the structural
+        # delta is the per-tick weight-side work, and interleaving
+        # cancels machine drift that sequential phases would alias
+        # into the comparison. The prepared/raw pair is the SAME
+        # target with prepare_weights flipped — the one-knob ablation
+        # the HardwareTarget makes explicit.
+        pair = {}
+        for prepared in (True, False):
+            se = compiler_lib.compile(
+                cfg, params,
+                dataclasses.replace(target, prepare_weights=prepared),
+            ).serve(max_batch=max_batch, max_len=prompt_len + budget + 2)
+            for i, p in enumerate(prompts):
+                se.submit(Request(rid=i, prompt=p, max_new_tokens=budget))
+            # first steps admit+prefill+compile; excluded from timing
+            for _ in range(warmup):
+                se.step()
+            pair["prepared" if prepared else "raw"] = se
+        times: dict[str, list[float]] = {"prepared": [], "raw": []}
+        for _ in range(ticks):
+            times["prepared"].append(_timed_step(pair["prepared"]))
+            times["raw"].append(_timed_step(pair["raw"]))
+        for label, se in pair.items():
+            row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
+        # the robust statistic: each (prepared, raw) tick pair is
+        # adjacent in time, so the per-pair difference cancels drift
+        # and a noise spike only perturbs one pair — the gate pools
+        # these deltas per engine
+        row["paired_deltas_ms"] = [
+            (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
+        ]
+        row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
+        row["programmed"] = pair["prepared"].stats["programmed"]
+        row["program_ms"] = pair["prepared"].stats["program_s"] * 1e3
+        # same admission order both runs: compare per-slot streams
+        gens = {
+            label: {
+                slot: tuple(r.generated)
+                for slot, r in enumerate(se.slot_req)
+                if r is not None
             }
-            row["speedup"] = row["tick_ms_raw"] / max(row["tick_ms_prepared"], 1e-9)
-            row["exact"] = gens["prepared"] == gens["raw"] and bool(gens["prepared"])
-            rows.append(row)
+            for label, se in pair.items()
+        }
+        row["speedup"] = row["tick_ms_raw"] / max(row["tick_ms_prepared"], 1e-9)
+        row["exact"] = gens["prepared"] == gens["raw"] and bool(gens["prepared"])
+        rows.append(row)
     return rows
 
 
@@ -129,17 +129,25 @@ def modeled_programming():
     return layer, out
 
 
-def run(smoke: bool = False) -> tuple[int, dict]:
+def run(smoke: bool = False, engines=None, ks=None) -> tuple[int, dict]:
+    from repro.compiler import HardwareTarget
+
     if smoke:
-        engines = GATE_ENGINES
-        ks = (1, 4)
+        engines = engines or GATE_ENGINES
+        ks = ks or (1, 4)
         sizes = dict(max_batch=4, prompt_len=5, warmup=3, ticks=20)
     else:
-        engines = GATE_ENGINES + ("tacitmap",)
-        ks = (1, 2, 4)
+        engines = engines or GATE_ENGINES + ("tacitmap",)
+        ks = ks or (1, 2, 4)
         sizes = dict(max_batch=4, prompt_len=6, warmup=3, ticks=32)
 
-    rows = measured_sweep(engines, ks, **sizes)
+    # one HardwareTarget per (engine, K); measured_sweep flips each
+    # target's prepare_weights for the prepared-vs-raw pair
+    targets = [
+        HardwareTarget(engine=name, group_size=k)
+        for name in engines for k in ks
+    ]
+    rows = measured_sweep(targets, **sizes)
 
     print("\n== serving decode-tick latency: prepared vs raw weights "
           f"(smoke LM, batch={sizes['max_batch']}, median of {sizes['ticks']} "
@@ -160,11 +168,18 @@ def run(smoke: bool = False) -> tuple[int, dict]:
         if r["engine"] in GATE_ENGINES:
             deltas.setdefault(r["engine"], []).extend(r["paired_deltas_ms"])
     per_engine = {e: statistics.median(d) for e, d in deltas.items()}
-    faster = all(d > 0 for d in per_engine.values())
+    # the gate must not pass vacuously: an --engine restriction that
+    # sweeps no gate engine SKIPS the gate (None, reported as such)
+    # rather than claiming packed/wdm/tiled were measured faster
+    faster = all(d > 0 for d in per_engine.values()) if per_engine else None
     print("per-engine pooled median tick delta (raw - prepared, ms): "
           + "  ".join(f"{e}={d:+.3f}" for e, d in per_engine.items()))
-    print(f"prepared strictly faster on {'/'.join(GATE_ENGINES)}: {faster}; "
-          f"bit-exact prepared vs raw: {exact}")
+    if per_engine:
+        print(f"prepared strictly faster on {'/'.join(sorted(per_engine))}: "
+              f"{faster}; bit-exact prepared vs raw: {exact}")
+    else:
+        print("prepared-faster gate SKIPPED (no gate engine swept); "
+              f"bit-exact prepared vs raw: {exact}")
     print("(raw re-runs the weight-side transforms inside every decode tick; "
           "prepared programs them once at engine bind — the CIM premise)")
 
@@ -180,7 +195,7 @@ def run(smoke: bool = False) -> tuple[int, dict]:
     print("(PCM writes cost ~10^4 reads; the write amortizes over the decode "
           "stream — the prepared-weights contract is that amortization in software)")
 
-    rc = 0 if (exact and faster) else 1
+    rc = 0 if (exact and faster is not False) else 1
     payload = {
         "measured": rows,
         "modeled": {"layer": {"m": layer.m, "n": layer.n}, "designs": modeled},
@@ -190,9 +205,32 @@ def run(smoke: bool = False) -> tuple[int, dict]:
     return rc, payload
 
 
-def main(smoke: bool = False) -> int:
-    return run(smoke=smoke)[0]
+def main(smoke: bool = False, engines=None, ks=None) -> int:
+    return run(smoke=smoke, engines=engines, ks=ks)[0]
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    import argparse
+
+    from repro.compiler import add_target_args, target_from_args
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
+    # shared target flags; --engine/--group-size restrict the sweep axes
+    add_target_args(ap, default_engine=None)
+    args = ap.parse_args()
+    try:
+        tgt = target_from_args(args)
+    except Exception as e:
+        ap.error(str(e))
+    # no silent knob drops: the flags this sweep does not consume are
+    # rejected, not accepted-and-ignored
+    if tgt.wants_plan or not tgt.prepare_weights:
+        ap.error("--mapping-policy/--tile-budget/--raw-weights do not apply: "
+                 "this sweep grids engine x K and flips prepare_weights "
+                 "itself (the prepared-vs-raw pair)")
+    raise SystemExit(main(
+        smoke=args.smoke,
+        engines=(tgt.engine,) if args.engine else None,
+        ks=(tgt.group_size,) if tgt.group_size else None,
+    ))

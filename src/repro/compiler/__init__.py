@@ -1,0 +1,56 @@
+"""One-call hardware compilation: ``HardwareTarget`` + ``compile()``
+-> ``CompiledModel``.
+
+The paper presents ONE pipeline — map the BNN onto the crossbar
+(TacitMap), program the oPCM cells once, stream activations under WDM
+(EinsteinBarrier) — and this package is that pipeline's single entry
+point. Instead of hand-threading five knobs (engine name,
+``CrossbarSpec``, mapping policy/plan, K-group width, prepare/cache
+switches) through every consumer in a different order, a consumer
+builds one :class:`HardwareTarget` and calls :func:`compile`::
+
+    from repro.compiler import HardwareTarget, compile
+
+    cm = compile(cfg, params, HardwareTarget(engine="tiled",
+                                             mapping_policy="greedy",
+                                             group_size=8))
+    se = cm.serve(max_batch=8, max_len=256)     # continuous batching
+    logits, caches = cm.prefill(tokens)          # or drive it directly
+    print(cm.price().summary())                  # plan+program+tick cost
+    print(cm.describe())                         # placement tables
+
+Module map:
+
+* :mod:`repro.compiler.target`   — :class:`HardwareTarget` + the named
+  validation errors (:class:`TargetError`,
+  :class:`PlanEngineMismatchError`, :class:`SpecMismatchError`,
+  :class:`GroupSizeError`).
+* :mod:`repro.compiler.pipeline` — :func:`compile`,
+  :class:`CompiledModel`, :class:`TargetPrice`, :func:`resolve_engine`.
+* :mod:`repro.compiler.cli`      — the shared ``--engine`` /
+  ``--group-size`` / ``--mapping-policy`` / ``--tile-budget`` argparse
+  surface (:func:`add_target_args` / :func:`target_from_args`).
+
+Consumers: ``ServingEngine`` accepts a :class:`CompiledModel` (legacy
+kwargs are a deprecation shim that builds a target),
+``launch/serve.py`` constructs a target from its flags, the serving /
+mapping benchmarks sweep over targets, and ``benchmarks/dse.py`` grids
+policy x tile budget x K through :meth:`CompiledModel.price`. A future
+multi-device serving path is one more target field (``mesh_axis``),
+not a sixth ad-hoc knob.
+"""
+
+from repro.compiler.cli import add_target_args, target_from_args  # noqa: F401
+from repro.compiler.pipeline import (  # noqa: F401
+    CompiledModel,
+    TargetPrice,
+    compile,
+    resolve_engine,
+)
+from repro.compiler.target import (  # noqa: F401
+    GroupSizeError,
+    HardwareTarget,
+    PlanEngineMismatchError,
+    SpecMismatchError,
+    TargetError,
+)

@@ -1,0 +1,86 @@
+"""Shared argparse surface for hardware targets.
+
+``launch/serve.py`` and the benchmark drivers used to re-declare the
+``--engine`` / ``--group-size`` / ``--mapping-policy`` blocks
+independently (and in different orders); this module is the one place
+the target flags are spelled. ``add_target_args(parser)`` installs
+them, ``target_from_args(args)`` builds the
+:class:`~repro.compiler.target.HardwareTarget` the rest of the stack
+consumes::
+
+    ap = argparse.ArgumentParser()
+    add_target_args(ap)
+    args = ap.parse_args()
+    compiled = compile(cfg, params, target_from_args(args))
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.compiler.target import HardwareTarget
+
+
+def add_target_args(
+    ap: argparse.ArgumentParser, *, default_engine: str | None = "reference"
+) -> argparse.ArgumentParser:
+    """Install the shared hardware-target flags on a parser.
+
+    ``default_engine=None`` leaves ``--engine`` unset by default —
+    benchmark CLIs use that to mean "sweep the registry" while a passed
+    flag restricts the sweep to one backend.
+    """
+    from repro.core import engine as engine_lib
+    from repro.mapping import POLICIES
+
+    ap.add_argument(
+        "--engine",
+        default=default_engine,
+        # argparse-time validation: a typo'd backend fails here with the
+        # registered names listed, not deep in engine construction
+        choices=engine_lib.list_engines(),
+        help="execution backend for binarized projections "
+        "(registered in repro.core.engine)"
+        + ("" if default_engine else "; default: sweep all"),
+    )
+    ap.add_argument(
+        "--group-size",
+        type=int,
+        default=0,
+        help="WDM K-group width for batched decode (0 = auto from the "
+        "mapping plan / engine's preferred_group_size / batch)",
+    )
+    ap.add_argument(
+        "--mapping-policy",
+        default=None,
+        choices=POLICIES,
+        help="compile a layer->tile MappingPlan under this allocator "
+        "policy and execute per it (requires --engine tiled)",
+    )
+    ap.add_argument(
+        "--tile-budget",
+        type=int,
+        default=None,
+        metavar="N",
+        help="cap the physical tile pool the mapping plan provisions "
+        "(co-resident blocks serialize; requires --engine tiled)",
+    )
+    ap.add_argument(
+        "--raw-weights",
+        action="store_true",
+        help="skip the one-time crossbar-programming phase and re-run "
+        "the weight-side transforms every tick (benchmark baseline)",
+    )
+    return ap
+
+
+def target_from_args(args: argparse.Namespace) -> HardwareTarget:
+    """Build (and statically validate) a HardwareTarget from parsed
+    ``add_target_args`` flags."""
+    return HardwareTarget(
+        engine=args.engine or "reference",
+        group_size=args.group_size or None,
+        mapping_policy=args.mapping_policy,
+        tile_budget=args.tile_budget,
+        prepare_weights=not getattr(args, "raw_weights", False),
+    ).validate()

@@ -1,0 +1,160 @@
+"""The hardware target: every knob of the map->program->execute pipeline
+in ONE frozen artifact.
+
+Before this package, driving the stack meant hand-threading five
+separately-spelled knobs in the right order — an engine name, a
+``CrossbarSpec``, a mapping policy / ``MappingPlan``, a K-group width
+and the prepare/cache switches — and every consumer (``ServingEngine``,
+``launch/serve.py``, each benchmark) re-wired them differently.
+:class:`HardwareTarget` bundles them; :func:`repro.compiler.compile`
+consumes one and runs the pipeline in the canonical order.
+
+Validation is EAGER and errors are NAMED: an inconsistent target
+(a mapping policy on a non-tiled engine, a plan compiled for different
+tiles than the target binds, a K-group wider than the placed tiles'
+WDM capacity) fails at compile time with a
+:class:`TargetError` subclass, not as a silently-dropped knob deep in
+serving — the pre-redesign ``ServingEngine`` accepted
+``mapping_plan=`` with ``engine="wdm"`` and quietly used it only for K.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.crossbar import CrossbarSpec
+
+
+class TargetError(ValueError):
+    """An inconsistent or unsupported :class:`HardwareTarget`."""
+
+
+class PlanEngineMismatchError(TargetError):
+    """A mapping plan / policy / tile budget paired with an engine that
+    does not execute placements (only ``tiled`` consumes a plan)."""
+
+
+class SpecMismatchError(TargetError):
+    """The target's tile spec disagrees with the plan it binds."""
+
+
+class GroupSizeError(TargetError):
+    """A K-group width the target's hardware cannot multiplex."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTarget:
+    """One complete description of WHERE and HOW a BNN executes.
+
+    The paper's pipeline is map (TacitMap) -> program (oPCM write) ->
+    execute (WDM streaming); a target names each stage's choice once:
+
+    * ``engine`` — a backend registered in :mod:`repro.core.engine`
+      (``reference`` | ``tacitmap`` | ``wdm`` | ``packed`` | ``tiled``
+      | ``custbinarymap`` | any third-party registration).
+    * ``spec`` — the crossbar tile geometry/technology; ``None`` uses
+      the engine's default tile (ePCM or oPCM per its capability row).
+    * ``mapping_policy`` / ``tile_budget`` — compile an explicit
+      layer->tile :class:`~repro.mapping.allocator.MappingPlan` under
+      this allocator policy (and optional physical-tile cap) and execute
+      per it. Only meaningful for the plan-driven ``tiled`` engine.
+    * ``group_size`` — explicit WDM K-group width for batched decode
+      (``None`` = auto: plan WDM capacity > engine capability > one
+      vmap'd group spanning the pool).
+    * ``prepare_weights`` — run the one-time crossbar-programming phase
+      (``lm.program_weights``) at compile time so decode streams only
+      activations; ``False`` keeps the per-tick re-programming path
+      (the prepared-vs-raw benchmark baseline).
+    * ``mesh_axis`` — optional sharding hint: the named mesh axis the
+      future multi-device serving path shards K-groups / plan tiles
+      over. Recorded on the target (a mesh is one more field of the
+      target, not a sixth ad-hoc knob); today only the ``tiled``
+      engine's tile axis consumes it via ``distributed.hints``.
+    """
+
+    engine: str = "reference"
+    spec: CrossbarSpec | None = None
+    mapping_policy: str | None = None
+    tile_budget: int | None = None
+    group_size: int | None = None
+    prepare_weights: bool = True
+    mesh_axis: str | None = None
+
+    def __post_init__(self):
+        # normalize the CLI's "0 = auto" convention to None
+        if self.group_size == 0:
+            object.__setattr__(self, "group_size", None)
+
+    # -- validation ---------------------------------------------------------
+
+    @property
+    def wants_plan(self) -> bool:
+        """True when this target asks for an explicit MappingPlan."""
+        return self.mapping_policy is not None or self.tile_budget is not None
+
+    def validate(self) -> "HardwareTarget":
+        """Eager static validation (no model needed); returns self.
+
+        :func:`repro.compiler.compile` calls this first, then adds the
+        model/plan-dependent checks (spec mismatch, K vs plan capacity).
+        """
+        from repro.core import engine as engine_lib
+
+        if self.engine not in engine_lib.list_engines():
+            raise TargetError(
+                f"unknown engine {self.engine!r}; registered: "
+                f"{', '.join(engine_lib.list_engines())}"
+            )
+        if self.mapping_policy is not None:
+            from repro.mapping import POLICIES
+
+            if self.mapping_policy not in POLICIES:
+                raise TargetError(
+                    f"unknown mapping policy {self.mapping_policy!r}; "
+                    f"known: {', '.join(POLICIES)}"
+                )
+        if self.wants_plan and self.engine != "tiled":
+            raise PlanEngineMismatchError(
+                f"mapping_policy/tile_budget compile a layer->tile plan for "
+                f"the plan-driven 'tiled' engine, but the target's engine is "
+                f"{self.engine!r} — it would silently ignore the placement. "
+                f"Use engine='tiled' (or drop the mapping fields)."
+            )
+        if self.tile_budget is not None and self.tile_budget < 1:
+            raise TargetError(
+                f"tile_budget must be >= 1, got {self.tile_budget}"
+            )
+        if self.group_size is not None and self.group_size < 1:
+            raise GroupSizeError(
+                f"group_size must be >= 1 (or None for auto), got {self.group_size}"
+            )
+        if self.mesh_axis is not None and self.engine != "tiled":
+            raise TargetError(
+                f"mesh_axis={self.mesh_axis!r} names the mesh axis the "
+                "plan-driven 'tiled' engine shards its tile axis over, but "
+                f"the target's engine is {self.engine!r} — it would silently "
+                "ignore the hint (sharding K-groups across a mesh for other "
+                "engines is the multi-device serving open item)"
+            )
+        return self
+
+    # -- description --------------------------------------------------------
+
+    def describe(self) -> str:
+        """One line naming every pipeline choice this target pins."""
+        spec = (
+            "default"
+            if self.spec is None
+            else f"{self.spec.technology} {self.spec.rows}x{self.spec.cols}"
+            + (f" K={self.spec.wdm_k}" if self.spec.wdm_k > 1 else "")
+        )
+        parts = [f"engine={self.engine}", f"spec={spec}"]
+        if self.mapping_policy is not None:
+            parts.append(f"policy={self.mapping_policy}")
+        if self.tile_budget is not None:
+            parts.append(f"tile_budget={self.tile_budget}")
+        parts.append(f"K={'auto' if self.group_size is None else self.group_size}")
+        parts.append(f"prepared={self.prepare_weights}")
+        if self.mesh_axis is not None:
+            parts.append(f"mesh_axis={self.mesh_axis}")
+        return "[target] " + " ".join(parts)

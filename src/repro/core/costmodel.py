@@ -535,6 +535,64 @@ def price_plan(plan, params: CIMParams | None = None, batch: int | None = None) 
     )
 
 
+def plan_programming_cost(plan, params: CIMParams | None = None) -> ProgrammingCost:
+    """One-time PCM-write cost of programming a whole MappingPlan.
+
+    Sums :func:`layer_programming_cost` over the plan's binary IR
+    entries (scan-repeat ``count`` expanded) on the design the plan's
+    tile spec implies — the programming half of
+    ``repro.compiler.CompiledModel.price()``.
+    """
+    params = params or params_for_spec(plan.spec)
+    total = ProgrammingCost(cells=0, energy_pj=0.0, time_ns=0.0)
+    for ir in plan.model.layers:
+        if not ir.binary:
+            continue
+        one = layer_programming_cost(params, ir.to_layer_desc())
+        total = total + ProgrammingCost(
+            cells=one.cells * ir.count,
+            energy_pj=one.energy_pj * ir.count,
+            time_ns=one.time_ns * ir.count,
+        )
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanTickCost:
+    """One K-grouped serving decode tick through EVERY binary layer of a
+    plan (the per-tick readout half of ``CompiledModel.price()``)."""
+
+    n_active: int
+    k: int
+    groups: int           # crossbar activations per tick, all layers
+    latency_ns: float
+    energy_pj: float
+
+
+def plan_decode_tick(
+    plan, n_active: int, params: CIMParams | None = None
+) -> PlanTickCost:
+    """Price one serving tick of ``n_active`` slots through a plan.
+
+    Aggregates :func:`grouped_decode_tick` over the plan's binary IR
+    entries × instance counts — what one decode token costs on the
+    placed hardware once the weights are resident.
+    """
+    params = params or params_for_spec(plan.spec)
+    groups, lat, en = 0, 0.0, 0.0
+    for ir in plan.model.layers:
+        if not ir.binary:
+            continue
+        tick = grouped_decode_tick(params, ir.to_layer_desc(), n_active)
+        groups += ir.count * tick.groups
+        lat += ir.count * tick.latency_ns
+        en += ir.count * tick.energy_pj
+    return PlanTickCost(
+        n_active=n_active, k=params.k, groups=groups,
+        latency_ns=lat, energy_pj=en,
+    )
+
+
 # ---------------------------------------------------------------------------
 # GPU model
 # ---------------------------------------------------------------------------

@@ -69,9 +69,18 @@ Consumers resolve engines by name (CLI flags, configs) or pass
     pw = eng.prepare(w_signs)          # program once ("crossbar write")
     out = eng.binary_vmm(a_signs, pw)  # stream activations
 
+Model-level consumers should not hand-wire this: the one-call
+``repro.compiler`` pipeline runs engine resolution, K-grouping and the
+programming phase in the canonical order from a single target::
+
+    # was: get_engine(name) + replace(cfg, quant="bnn", bnn_engine=name)
+    #      + resolve_group_size(...) + GroupedEngine(eng, k)
+    #      + lm.program_weights(params, cfg, eng)
+    cm = repro.compiler.compile(cfg, params, HardwareTarget(engine="packed"))
+
 New backends (multi-level cells, sharded crossbars, GPU) register with
-:func:`register_engine` and become available to models, serving and
-benchmarks without touching any consumer.
+:func:`register_engine` and become available to models, serving,
+benchmarks and hardware targets without touching any consumer.
 """
 
 from __future__ import annotations
@@ -542,9 +551,10 @@ class TiledEngine(_EngineBase):
 
     The tile axis is the sharding axis: under an active
     ``activation_hints`` mesh the stacked tiles and their partials are
-    constrained to the ``model`` axis, so a multi-device run splits the
-    plan's tile pool across devices (the ROADMAP's "sharded-crossbar
-    tiles" backend).
+    constrained to the engine's ``mesh_axis`` (default ``model``;
+    ``HardwareTarget.mesh_axis`` threads through here), so a
+    multi-device run splits the plan's tile pool across devices (the
+    ROADMAP's "sharded-crossbar tiles" backend).
 
     Construction: ``get_engine("tiled", plan=plan)`` executes per a
     compiled plan (and inherits its tile spec); without a plan, each
@@ -560,7 +570,14 @@ class TiledEngine(_EngineBase):
 
     ADHOC_CACHE_SIZE = 32
 
-    def __init__(self, spec: CrossbarSpec | None = None, *, plan=None, policy: str = "tacitmap"):
+    def __init__(
+        self,
+        spec: CrossbarSpec | None = None,
+        *,
+        plan=None,
+        policy: str = "tacitmap",
+        mesh_axis: str = "model",
+    ):
         if plan is not None and spec is None:
             spec = plan.spec
         super().__init__(spec)
@@ -572,12 +589,13 @@ class TiledEngine(_EngineBase):
             )
         self.plan = plan
         self.policy = policy
+        self.mesh_axis = mesh_axis
         self._adhoc_cache = LRUCache(self.ADHOC_CACHE_SIZE)
         self._index_cache = LRUCache(self.ADHOC_CACHE_SIZE)
 
     def with_spec(self, spec: CrossbarSpec) -> "TiledEngine":
         keep = self.plan if (self.plan is not None and self.plan.spec == spec) else None
-        return type(self)(spec, plan=keep, policy=self.policy)
+        return type(self)(spec, plan=keep, policy=self.policy, mesh_axis=self.mesh_axis)
 
     def cache_stats(self) -> dict[str, dict[str, int]]:
         return {
@@ -659,7 +677,7 @@ class TiledEngine(_EngineBase):
         padded = jnp.pad(pw.data, ((0, RT * R - 2 * m), (0, CT * C - n)))
         blocks = padded.reshape(RT, R, CT, C).transpose(0, 2, 1, 3).reshape(RT * CT, R, C)
         tiles = jnp.take(blocks, jnp.asarray(block_ids, jnp.int32), axis=0)
-        tiles = hint(tiles, "model")  # shard the tile axis when a mesh is active
+        tiles = hint(tiles, self.mesh_axis)  # shard the tile axis when a mesh is active
 
         # inputs: complement drive, cut into the row blocks each tile sees
         drive = bnn.concat_complement_input(bnn.signs_to_bits(a_signs))
@@ -674,7 +692,7 @@ class TiledEngine(_EngineBase):
             return adc_quantize(pc, spec, active_rows=R)
 
         partial = jax.vmap(one_tile)(tiles, drive_t)  # (T, ..., C)
-        partial = hint(partial, "model")
+        partial = hint(partial, self.mesh_axis)
         # digital partial-sum accumulation: row-block partials of each
         # output column group add up, in whatever order the plan placed them
         summed = jax.ops.segment_sum(

@@ -10,21 +10,30 @@ a fixed-capacity KV/SSM cache.
 
 Uses the same decode_step the dry-run lowers for the ``decode_*``
 cells, so serving on the production mesh is the identical program.
-``--engine`` picks any backend registered in ``repro.core.engine``; a
-non-reference engine implies ``quant="bnn"`` (the backends execute the
-binarized ±1 projections — there is nothing for them to run in an fp
-model).
 
-``--group-size`` sets the WDM-style K-group width: every decode tick's
-binarized projections go down as ONE ``binary_mmm`` call of
-ceil(batch/K) stacked K-groups (0 = auto: a compiled mapping plan's WDM
-capacity first, then native-MMM engines' wavelength count, else one
-vmap'd group spanning the batch).
+Execution is driven through the one-call hardware-compilation API
+(``repro.compiler``): the shared target flags (``--engine``,
+``--group-size``, ``--mapping-policy``, ``--tile-budget``,
+``--raw-weights`` — installed by ``compiler.add_target_args``) build ONE
+:class:`~repro.compiler.HardwareTarget`, and
+``compile(cfg, params, target)`` runs plan compilation, engine
+resolution and the one-time crossbar-programming phase in the canonical
+order. What used to be five separately-threaded knobs::
+
+    eng = get_engine(args.engine, plan=plan, policy=policy)
+    cfg = replace(cfg, quant="bnn", bnn_engine=args.engine)
+    k = resolve_group_size(eng, args.group_size, args.batch, plan=plan)
+    grouped = GroupedEngine(eng, k)
+    params, n = lm_lib.program_weights(params, cfg, grouped)
+
+is now::
+
+    compiled = compiler.compile(cfg, params, target_from_args(args))
 
 ``--mapping-policy`` (with ``--engine tiled``) compiles the arch's
-binarized projections into an explicit layer->tile MappingPlan
-(``repro.mapping``), prints the placement summary + cost-model pricing,
-and executes the ±1 matmuls per that placement:
+binarized projections into an explicit layer->tile MappingPlan and
+prints the placement summary + cost-model pricing
+(``compiled.describe()``):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --smoke --engine tiled --mapping-policy greedy
@@ -38,8 +47,7 @@ import time
 
 
 def main(argv: list[str] | None = None) -> int:
-    from repro.core import engine as engine_lib
-    from repro.mapping import POLICIES
+    from repro import compiler as compiler_lib
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -48,33 +56,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument(
-        "--engine",
-        default="reference",
-        # argparse-time validation: a typo'd backend fails here with the
-        # registered names listed, not deep in engine construction
-        choices=engine_lib.list_engines(),
-        help="execution backend for binarized projections "
-        "(registered in repro.core.engine)",
-    )
-    ap.add_argument(
-        "--group-size",
-        type=int,
-        default=0,
-        help="WDM K-group width for batched decode (0 = auto from the "
-        "mapping plan / engine's preferred_group_size / batch)",
-    )
-    ap.add_argument(
-        "--mapping-policy",
-        default=None,
-        choices=POLICIES,
-        help="compile a layer->tile MappingPlan under this allocator "
-        "policy and execute per it (requires --engine tiled)",
-    )
+    # the shared hardware-target surface (engine / K / mapping / prepare)
+    compiler_lib.add_target_args(ap)
     args = ap.parse_args(argv)
-    if args.mapping_policy is not None and args.engine != "tiled":
-        ap.error("--mapping-policy places weights for the plan-driven "
-                 "'tiled' engine; pass --engine tiled with it")
+    try:
+        target = compiler_lib.target_from_args(args)
+    except compiler_lib.TargetError as e:
+        ap.error(str(e))
+    if target.engine == "reference" and target.group_size:
+        # (the serving engine's BatchPlanner can group the plain-jnp
+        # path; this batch driver only groups through a backend)
+        ap.error("--group-size requires a non-reference --engine")
 
     import jax
     import jax.numpy as jnp
@@ -85,54 +77,58 @@ def main(argv: list[str] | None = None) -> int:
     from repro.models import lm as lm_lib
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    grouped = None
-    plan = None
-    if args.engine != "reference":
-        engine_kw = {}
-        if args.engine == "tiled":
-            from repro.core import costmodel
-            from repro.mapping import compile_plan, report
+    if target.engine == "tiled" and target.mapping_policy is None:
+        # `--engine tiled` always executes per an explicit compiled plan
+        # here; the policy falls back to the arch config's default
+        target = dataclasses.replace(target, mapping_policy=cfg.mapping_policy)
+    if cfg.is_encdec:
+        # the compiler pipeline covers the decoder-only LM projection
+        # stack; enc-dec archs bind the backend via cfg.bnn_engine and
+        # reject the decoder-only-serving knobs
+        if target.group_size:
+            ap.error("--group-size applies to the decoder-only serving path")
+        if target.wants_plan:
+            ap.error("--mapping-policy/--tile-budget place weights for the "
+                     "decoder-only LM projection stack")
+        if not target.prepare_weights:
+            ap.error("--raw-weights toggles the decoder-only compile "
+                     "pipeline's programming phase; the enc-dec path never "
+                     "programs weights")
+        if target.engine != "reference":
+            cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=target.engine)
+            from repro.core import engine as engine_lib
 
-            policy = args.mapping_policy or cfg.mapping_policy
-            cfg = dataclasses.replace(cfg, mapping_policy=policy)
-            if cfg.is_encdec:
-                ap.error("--engine tiled: mapping plans cover the "
-                         "decoder-only LM projection stack")
-            plan = compile_plan(cfg, policy=policy)
-            cost = costmodel.price_plan(plan)
-            print(report.summarize(plan))
-            print(f"[serve] plan priced on {cost.design}: "
-                  f"{cost.latency_s * 1e6:.2f} us/inf, "
-                  f"{cost.energy_j * 1e6:.3f} uJ/inf")
-            engine_kw = {"plan": plan, "policy": policy}
-        eng = engine_lib.get_engine(args.engine, **engine_kw)
-        cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=args.engine)
-        print(f"[serve] engine={eng.name} ({eng.info.description})")
-        if cfg.is_encdec:
-            if args.group_size:
-                ap.error("--group-size applies to the decoder-only serving path")
-        else:
-            k = engine_lib.resolve_group_size(eng, args.group_size, args.batch, plan=plan)
-            grouped = engine_lib.GroupedEngine(eng, k)
-            print(f"[serve] K-group batching: K={k}, "
-                  f"{-(-args.batch // k)} group(s)/tick over batch={args.batch}, "
-                  f"idle lanes/tick={-(-args.batch // k) * k - args.batch}")
-    elif args.group_size:
-        ap.error("--group-size requires a non-reference --engine")
+            eng = engine_lib.get_engine(target.engine)
+            print(f"[serve] engine={eng.name} ({eng.info.description})")
+
     max_len = args.prompt_len + args.gen
     key = jax.random.key(args.seed)
     params = (
         encdec_lib.init_params(key, cfg) if cfg.is_encdec else lm_lib.init_params(key, cfg)
     )
-    if grouped is not None:
-        # crossbar programming phase: compile the binarized projections
-        # into the backend's resident form once; the decode loop below
-        # then streams only activations (PR 4 two-phase contract)
-        t0 = time.time()
-        params, n_programmed = lm_lib.program_weights(params, cfg, grouped)
-        print(f"[serve] programmed {n_programmed} binarized projection "
-              f"instance(s) into {args.engine} resident form "
-              f"({(time.time() - t0) * 1e3:.1f} ms, one-time PCM write)")
+    compiled = None
+    if not cfg.is_encdec:
+        # the one-call pipeline: map (plan) -> resolve (engine) ->
+        # program (one-time PCM write); raises named TargetErrors on
+        # inconsistent combinations instead of dropping knobs
+        try:
+            compiled = compiler_lib.compile(cfg, params, target)
+        except compiler_lib.TargetError as e:
+            ap.error(str(e))
+        cfg, params = compiled.cfg, compiled.params
+        if compiled.engine is not None:
+            print(f"[serve] engine={compiled.engine.name} "
+                  f"({compiled.engine.info.description})")
+            if compiled.plan is not None:
+                print(compiled.describe())
+            k = compiled.group_size_for(args.batch)
+            print(f"[serve] K-group batching: K={k}, "
+                  f"{-(-args.batch // k)} group(s)/tick over batch={args.batch}, "
+                  f"idle lanes/tick={-(-args.batch // k) * k - args.batch}")
+            if compiled.programmed:
+                print(f"[serve] programmed {compiled.programmed} binarized "
+                      f"projection instance(s) into {target.engine} resident "
+                      f"form ({compiled.program_s * 1e3:.1f} ms, one-time PCM write)")
     batch = lm_batch(cfg, args.batch, args.prompt_len, seed=args.seed)
     tokens = batch["tokens"]
 
@@ -151,22 +147,15 @@ def main(argv: list[str] | None = None) -> int:
             self_v=caches["self_v"].at[:, :, : args.prompt_len].set(pre_caches["self_v"]),
         )
         decode = jax.jit(lambda p, t, pos, c: encdec_lib.decode_step(p, t, pos, c, cfg))
+
+        def decode_step(tok, pos, caches):
+            return decode(params, tok, pos, caches)
     else:
-        extra = batch.get("extra_embeds")
-        logits, pre_caches = jax.jit(
-            lambda p, t, e: lm_lib.prefill(p, t, cfg, e, engine=grouped)
-        )(params, tokens, extra)
-        caches = lm_lib.init_cache(cfg, args.batch, max_len)
-
-        def graft(dst, src):
-            if dst.ndim == 5 and dst.shape[2] >= src.shape[2]:  # attn (L,B,T,KV,D)
-                return dst.at[:, :, : src.shape[2]].set(src.astype(dst.dtype))
-            return src.astype(dst.dtype)  # ssm states carry over directly
-
-        caches = jax.tree.map(graft, caches, pre_caches)
-        decode = jax.jit(
-            lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg, engine=grouped)
+        logits, pre_caches = compiled.prefill(tokens, batch.get("extra_embeds"))
+        caches = compiled.graft_prefill_caches(
+            compiled.init_cache(args.batch, max_len), pre_caches
         )
+        decode_step = compiled.decode_step
     t_prefill = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -175,7 +164,7 @@ def main(argv: list[str] | None = None) -> int:
     # positions continue after the prompt (+ any frontend prefix)
     base = args.prompt_len + (cfg.frontend_len if cfg.frontend == "vision" else 0)
     for i in range(args.gen - 1):
-        logits, caches = decode(params, tok, jnp.asarray(base + i, jnp.int32), caches)
+        logits, caches = decode_step(tok, jnp.asarray(base + i, jnp.int32), caches)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(out[-1])
@@ -186,11 +175,12 @@ def main(argv: list[str] | None = None) -> int:
           f"quant={cfg.quant} engine={cfg.bnn_engine}")
     print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode {args.gen - 1} steps "
           f"{t_decode*1e3:.1f} ms ({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
-    if grouped is not None and args.gen > 1:
+    if compiled is not None and compiled.engine is not None and args.gen > 1:
+        k = compiled.group_size_for(args.batch)
         ticks = args.gen - 1
-        groups = ticks * -(-args.batch // grouped.k)
+        groups = ticks * -(-args.batch // k)
         slot_steps = ticks * args.batch
-        print(f"[serve] batched path: K={grouped.k}, 1 binary_mmm call/projection/tick, "
+        print(f"[serve] batched path: K={k}, 1 binary_mmm call/projection/tick, "
               f"{groups} K-groups over {ticks} ticks "
               f"(vs {slot_steps} slot-at-a-time steps, {slot_steps / groups:.1f}x fewer)")
     print(f"[serve] generated[0,:8] = {gen[0, :8].tolist()}")

@@ -47,8 +47,13 @@ binarized matmuls through the plan-driven ``tiled`` engine::
     eng = get_engine("tiled", plan=plan)   # executes per the placement
     out = eng.binary_vmm(a_signs, w_signs) # bit-exact vs "reference"
 
-    # serving consults the plan's WDM capacity for K-group decode:
-    #   ServingEngine(cfg, params, engine="tiled", mapping_plan=plan)
+    # the one-call replacement (compiles the plan, binds the engine,
+    # programs the weights, consults the plan's WDM capacity for K):
+    cm = repro.compiler.compile(cfg, params,
+                                HardwareTarget(engine="tiled",
+                                               mapping_policy="greedy",
+                                               tile_budget=4096))
+    se = cm.serve(max_batch=8, max_len=256)
 """
 
 from repro.mapping.allocator import (  # noqa: F401

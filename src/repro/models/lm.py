@@ -7,6 +7,17 @@ in depth (an 80-layer qwen2 lowers as one scanned block), and
 rematerialization. The softmax loss is sequence-chunked so the full
 (B, S, V) logits tensor never materializes (a 152k vocab at 1M tokens
 would otherwise dominate memory).
+
+Inference consumers should reach ``prefill`` / ``decode_step`` /
+``program_weights`` through the one-call hardware-compilation API
+rather than threading engines by hand::
+
+    # was: eng = GroupedEngine(get_engine(name), k);
+    #      params, _ = program_weights(params, cfg, eng);
+    #      lm.prefill(params, tokens, cfg, engine=eng); ...
+    cm = repro.compiler.compile(cfg, params, HardwareTarget(engine=name))
+    logits, caches = cm.prefill(tokens)
+    logits, caches = cm.decode_step(tok, pos, caches)
 """
 
 from __future__ import annotations

@@ -29,15 +29,20 @@ Design:
   spanning the pool. Ragged
   tails (active % K != 0) pad the last group by repeating a real slot
   (an idle comb line); pad lanes are computed and discarded.
-* **Crossbar programming phase** (PR 4): when a registry backend is
-  bound, every binarized projection is compiled into the engine's
-  resident form ONCE at construction (``lm.program_weights`` — mapped
+* **Crossbar programming phase** (PR 4, moved into ``compile()`` PR 5):
+  every binarized projection is compiled into the engine's resident
+  form ONCE by the compiler pipeline (``lm.program_weights`` — mapped
   complement tiles, packed int32 words, gathered block stacks ...), so
   decode ticks trace zero weight-side transforms and stream only
   activations — the paper's Computation-In-Memory premise. The phase is
   counted in ``stats`` (``programmed`` instances, ``program_s`` wall
-  time); ``prepare_weights=False`` restores the per-tick re-programming
-  path (the prepared-vs-raw benchmark baseline).
+  time); a target with ``prepare_weights=False`` restores the per-tick
+  re-programming path (the prepared-vs-raw benchmark baseline).
+* **One-call construction** (PR 5): the engine/spec/plan/K/prepare
+  knobs live in a :class:`repro.compiler.HardwareTarget`;
+  ``compile(cfg, params, target).serve(max_batch=..., max_len=...)``
+  replaces the old five-kwarg constructor (which survives as a
+  deprecation shim routed through the same pipeline).
 * **Per-slot KV-cache scatter**: gather, decode and the scatter of the
   group's cache rows back into the resident pool run as ONE fused
   compiled dispatch per tick. Pad lanes mirror a real slot (identical
@@ -58,16 +63,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine as engine_lib
 from repro.models import lm as lm_lib
-from repro.models.config import ModelConfig
 
 Array = jax.Array
 
@@ -140,10 +143,22 @@ class BatchPlanner:
 
 
 class ServingEngine:
+    """Continuous batching over a :class:`repro.compiler.CompiledModel`.
+
+    The one-call construction is ``compile(cfg, params, target).serve()``
+    (or equivalently ``ServingEngine(compiled_model)``): the compiler
+    pipeline has already mapped, validated and programmed the target, so
+    serving just binds the slot pool. The legacy multi-knob signature
+    ``ServingEngine(cfg, params, engine=..., group_size=...,
+    mapping_plan=..., prepare_weights=...)`` survives as a deprecation
+    shim that builds the equivalent :class:`~repro.compiler.HardwareTarget`
+    — new code should construct the target itself.
+    """
+
     def __init__(
         self,
-        cfg: ModelConfig,
-        params: Any,
+        model,
+        params: Any = None,
         *,
         max_batch: int = 4,
         max_len: int = 256,
@@ -152,37 +167,59 @@ class ServingEngine:
         mapping_plan=None,
         prepare_weights: bool = True,
     ):
-        base_engine: engine_lib.Engine | None = None
-        if engine is not None and engine != "reference":
-            kw = {}
-            if engine == "tiled":
-                # the tiled backend executes per a compiled layer->tile
-                # placement; serving binds the plan (or falls back to
-                # on-the-fly placement under the config's policy)
-                kw = {"plan": mapping_plan, "policy": cfg.mapping_policy or "tacitmap"}
-            base_engine = engine_lib.get_engine(engine, **kw)  # validates eagerly
-            # a non-reference engine executes the binarized projections,
-            # so it implies quant="bnn" (same contract as launch/serve.py
-            # --engine); without this the flag would be a silent no-op
-            cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=engine)
+        from repro import compiler as compiler_lib
+
+        if isinstance(model, compiler_lib.CompiledModel):
+            if (
+                params is not None
+                or engine is not None
+                or mapping_plan is not None
+                or group_size is not None
+                or prepare_weights is not True
+            ):
+                raise TypeError(
+                    "pass EITHER a CompiledModel (the target already fixed "
+                    "engine/plan/K/prepare_weights at compile time) OR "
+                    "(cfg, params) with the legacy knobs"
+                )
+            compiled = model
+        else:
+            # deprecation shim: the pre-compiler wiring, re-expressed as
+            # a HardwareTarget run through the one canonical pipeline
+            if engine is not None or group_size or mapping_plan is not None:
+                warnings.warn(
+                    "ServingEngine(cfg, params, engine=/group_size=/"
+                    "mapping_plan=) is deprecated; build a "
+                    "repro.compiler.HardwareTarget and pass "
+                    "compile(cfg, params, target) (or call its .serve())",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            compiled = compiler_lib.compile(
+                model,
+                params,
+                compiler_lib.HardwareTarget(
+                    engine=engine or "reference",
+                    group_size=group_size or None,
+                    prepare_weights=prepare_weights,
+                ),
+                plan=mapping_plan,
+            )
+        self.compiled = compiled
+        cfg = compiled.cfg
         self.cfg = cfg
-        self.params = params
+        self.params = compiled.params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.mapping_plan = mapping_plan
+        self.mapping_plan = compiled.plan
 
-        # K-group sizing: explicit > mapping plan's WDM capacity >
-        # engine capability > one vmap'd group (one policy for every
-        # consumer: engine_lib.resolve_group_size)
-        self.group_k = engine_lib.resolve_group_size(
-            base_engine, group_size, max_batch, plan=mapping_plan
-        )
+        # K-group sizing: explicit target K > mapping plan's WDM
+        # capacity > engine capability > one vmap'd group (one policy
+        # for every consumer: engine_lib.resolve_group_size, applied by
+        # the compiled model)
+        self.group_k = compiled.group_size_for(max_batch)
         self.planner = BatchPlanner(self.group_k)
-        self._exec = (
-            engine_lib.GroupedEngine(base_engine, self.group_k)
-            if base_engine is not None
-            else None
-        )
+        self._exec = compiled.executor(max_batch)
         self.stats = {
             "ticks": 0,           # gathered decode launches
             "decoded": 0,         # real slot-tokens decoded (slot-at-a-time steps)
@@ -191,21 +228,12 @@ class ServingEngine:
                                   # the plain-jnp path executes instead)
             "pad_lanes": 0,       # idle wavelengths from ragged tails
             "prefills": 0,
-            "programmed": 0,      # projection instances compiled at bind time
-            "program_s": 0.0,     # crossbar-programming phase wall time
+            # crossbar programming happened in compile(): every
+            # binarized projection is resident in the backend's prepared
+            # form, so decode ticks trace zero weight-side transforms
+            "programmed": compiled.programmed,
+            "program_s": compiled.program_s,
         }
-
-        # crossbar programming: compile every binarized projection into
-        # the backend's resident form ONCE, so decode ticks trace zero
-        # weight-side transforms (prepare_weights=False keeps the
-        # per-tick re-programming path for comparison benchmarks)
-        if self._exec is not None and prepare_weights:
-            t0 = time.perf_counter()
-            self.params, n_programmed = lm_lib.program_weights(
-                self.params, cfg, self._exec
-            )
-            self.stats["programmed"] = n_programmed
-            self.stats["program_s"] = time.perf_counter() - t0
 
         self.caches = lm_lib.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)        # next write position

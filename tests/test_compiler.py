@@ -1,0 +1,510 @@
+"""The one-call hardware-compilation API (repro.compiler).
+
+Three contracts:
+
+* **Round trip** — ``compile(cfg, params, target)`` followed by
+  ``prefill``/``decode_step``/``serve`` is bit-exact against the
+  pre-redesign hand-wiring (engine lookup -> cfg flip -> K resolution ->
+  GroupedEngine -> program_weights -> lm entry points) for every
+  registered engine, with and without a compiled plan, prepared and raw.
+* **Eager validation** — inconsistent targets raise NAMED errors at
+  compile time (plan+engine mismatch, spec mismatch, K over plan
+  capacity) instead of silently dropping knobs the way the old
+  ``ServingEngine(mapping_plan=..., engine="wdm")`` did.
+* **Deprecation shim** — the legacy multi-knob ``ServingEngine``
+  signature builds the equivalent target and serves identically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler as compiler_lib
+from repro.compiler import (
+    CompiledModel,
+    GroupSizeError,
+    HardwareTarget,
+    PlanEngineMismatchError,
+    SpecMismatchError,
+    TargetError,
+    add_target_args,
+    target_from_args,
+)
+from repro.configs import get_smoke_config
+from repro.core import engine as engine_lib
+from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
+from repro.mapping import compile_plan
+from repro.models import lm as lm_lib
+from repro.serving import Request, ServingEngine
+
+ENGINES = tuple(engine_lib.list_engines())
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, (5,), np.int32) for _ in range(2)]
+    return cfg, params, prompts
+
+
+# ---------------------------------------------------------------------------
+# the PRE-redesign wiring, inlined — the ground truth compile() replaces
+# ---------------------------------------------------------------------------
+
+
+def _legacy_tokens(cfg, params, prompts, *, engine, group_size=None, plan=None,
+                   prepared=True, n_steps=3):
+    """Prefill + greedy decode via the old five-knob recipe."""
+    base = None
+    if engine != "reference":
+        kw = {}
+        if engine == "tiled":
+            kw = {"plan": plan, "policy": cfg.mapping_policy or "tacitmap"}
+        base = engine_lib.get_engine(engine, **kw)
+        cfg = dataclasses.replace(cfg, quant="bnn", bnn_engine=engine)
+    batch = len(prompts)
+    k = engine_lib.resolve_group_size(base, group_size, batch, plan=plan)
+    ex = engine_lib.GroupedEngine(base, k) if base is not None else None
+    if ex is not None and prepared:
+        params, _ = lm_lib.program_weights(params, cfg, ex)
+    tokens = jnp.stack([jnp.asarray(p) for p in prompts])
+    prompt_len = tokens.shape[1]
+    logits, pre = jax.jit(
+        lambda p, t: lm_lib.prefill(p, t, cfg, engine=ex)
+    )(params, tokens)
+    caches = lm_lib.init_cache(cfg, batch, prompt_len + n_steps + 2)
+
+    def graft(dst, src):
+        if dst.ndim == 5 and dst.shape[2] >= src.shape[2]:
+            return dst.at[:, :, : src.shape[2]].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype)
+
+    caches = jax.tree.map(graft, caches, pre)
+    decode = jax.jit(
+        lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg, engine=ex)
+    )
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(n_steps):
+        logits, caches = decode(params, tok, jnp.asarray(prompt_len + i, jnp.int32), caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return [t.tolist() for t in out]
+
+
+def _compiled_tokens(cfg, params, prompts, target, *, plan=None, n_steps=3):
+    """The same loop through the one-call artifact."""
+    cm = compiler_lib.compile(cfg, params, target, plan=plan)
+    tokens = jnp.stack([jnp.asarray(p) for p in prompts])
+    prompt_len = tokens.shape[1]
+    logits, pre = cm.prefill(tokens)
+    caches = cm.init_cache(len(prompts), prompt_len + n_steps + 2)
+
+    def graft(dst, src):
+        if dst.ndim == 5 and dst.shape[2] >= src.shape[2]:
+            return dst.at[:, :, : src.shape[2]].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype)
+
+    caches = jax.tree.map(graft, caches, pre)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(n_steps):
+        logits, caches = cm.decode_step(tok, jnp.asarray(prompt_len + i, jnp.int32), caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return [t.tolist() for t in out]
+
+
+def _serve_gens(se, prompts, n_new=3):
+    for i, p in enumerate(prompts):
+        se.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
+    return {r.rid: tuple(r.generated) for r in se.run_to_completion()}
+
+
+# ---------------------------------------------------------------------------
+# Round trip: compile -> prefill/decode/serve == legacy wiring
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name", ENGINES)
+    @pytest.mark.parametrize("prepared", [True, False])
+    def test_direct_drive_matches_legacy(self, name, prepared, model):
+        cfg, params, prompts = model
+        legacy = _legacy_tokens(cfg, params, prompts, engine=name,
+                                prepared=prepared, n_steps=2)
+        got = _compiled_tokens(
+            cfg, params, prompts,
+            HardwareTarget(engine=name, prepare_weights=prepared),
+            n_steps=2,
+        )
+        assert got == legacy
+
+    def test_plan_bound_tiled_matches_legacy(self, model):
+        cfg, params, prompts = model
+        plan = compile_plan(cfg, spec=OPCM_TILE, policy="greedy")
+        legacy = _legacy_tokens(cfg, params, prompts, engine="tiled",
+                                plan=plan, n_steps=2)
+        got = _compiled_tokens(
+            cfg, params, prompts, HardwareTarget(engine="tiled"),
+            plan=plan, n_steps=2,
+        )
+        assert got == legacy
+
+    def test_compiled_policy_plan_matches_reference(self, model):
+        """compile() compiling its own plan from the target's policy is
+        still semantically invisible."""
+        cfg, params, prompts = model
+        ref = _compiled_tokens(cfg, params, prompts, HardwareTarget(), n_steps=2)
+        for policy in ("tacitmap", "column-major", "greedy"):
+            got = _compiled_tokens(
+                cfg, params, prompts,
+                HardwareTarget(engine="tiled", mapping_policy=policy),
+                n_steps=2,
+            )
+            assert got == ref, policy
+
+    @pytest.mark.parametrize("name", [n for n in ENGINES if n != "reference"])
+    def test_serve_matches_reference_target(self, name, model):
+        cfg, params, prompts = model
+        got = _serve_gens(
+            compiler_lib.compile(cfg, params, HardwareTarget(engine=name))
+            .serve(max_batch=2, max_len=24),
+            prompts,
+        )
+        ref = _serve_gens(
+            compiler_lib.compile(cfg, params, HardwareTarget())
+            .serve(max_batch=2, max_len=24),
+            prompts,
+        )
+        assert got == ref
+
+    def test_compile_programs_once(self, model):
+        cfg, params, prompts = model
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
+        assert cm.programmed == cfg.n_repeats * 7  # q/k/v/o + w1/w3/w2
+        assert cm.program_s > 0
+        # the artifact replaced the latent weights on the compiled params
+        proj = cm.params["blocks"]["slot0"]["attn"]["q"]
+        assert "w" not in proj and "prepared" in proj
+        # raw target: nothing programmed
+        raw = compiler_lib.compile(
+            cfg, params, HardwareTarget(engine="wdm", prepare_weights=False)
+        )
+        assert raw.programmed == 0 and "w" in raw.params["blocks"]["slot0"]["attn"]["q"]
+
+    def test_group_size_resolution_precedence(self, model):
+        cfg, params, _ = model
+        # explicit target K wins
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm", group_size=3))
+        assert cm.group_size_for(8) == 3
+        # plan WDM capacity next (oPCM plan K=16, clamped to the pool)
+        plan = compile_plan(cfg, spec=OPCM_TILE, policy="greedy")
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="tiled"), plan=plan)
+        assert cm.group_size_for(32) == 16
+        # engine capability next (wdm wavelength count)
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
+        assert cm.group_size_for(32) == engine_lib.get_engine("wdm").spec.wdm_k
+        # plain path: one vmap'd group spanning the pool
+        cm = compiler_lib.compile(cfg, params, HardwareTarget())
+        assert cm.group_size_for(8) == 8 and cm.executor(8) is None
+
+
+# ---------------------------------------------------------------------------
+# Eager validation: named errors, no silently-dropped knobs
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def test_unknown_engine(self, model):
+        cfg, params, _ = model
+        with pytest.raises(TargetError, match="unknown engine"):
+            compiler_lib.compile(cfg, params, HardwareTarget(engine="nope"))
+
+    def test_unknown_policy(self, model):
+        cfg, params, _ = model
+        with pytest.raises(TargetError, match="unknown mapping policy"):
+            compiler_lib.compile(
+                cfg, params,
+                HardwareTarget(engine="tiled", mapping_policy="alphabetical"),
+            )
+
+    def test_policy_on_non_tiled_engine(self, model):
+        cfg, params, _ = model
+        with pytest.raises(PlanEngineMismatchError, match="tiled"):
+            compiler_lib.compile(
+                cfg, params, HardwareTarget(engine="wdm", mapping_policy="greedy")
+            )
+
+    def test_budget_on_non_tiled_engine(self, model):
+        cfg, params, _ = model
+        with pytest.raises(PlanEngineMismatchError):
+            compiler_lib.compile(
+                cfg, params, HardwareTarget(engine="packed", tile_budget=8)
+            )
+
+    def test_plan_on_non_tiled_engine(self, model):
+        """The old ServingEngine accepted mapping_plan= with engine="wdm"
+        and silently used it only for K — now a named error."""
+        cfg, params, _ = model
+        plan = compile_plan(cfg, policy="greedy")
+        with pytest.raises(PlanEngineMismatchError, match="silently"):
+            compiler_lib.compile(
+                cfg, params, HardwareTarget(engine="wdm"), plan=plan
+            )
+
+    def test_plan_spec_mismatch(self, model):
+        cfg, params, _ = model
+        plan = compile_plan(cfg, spec=OPCM_TILE, policy="greedy")
+        with pytest.raises(SpecMismatchError, match="recompile"):
+            compiler_lib.compile(
+                cfg, params,
+                HardwareTarget(engine="tiled", spec=EPCM_TILE),
+                plan=plan,
+            )
+
+    def test_plan_policy_conflict(self, model):
+        """A bound plan already fixed the allocator choices; a target
+        naming different ones is a silent knob drop — named error."""
+        cfg, params, _ = model
+        plan = compile_plan(cfg, policy="tacitmap")
+        with pytest.raises(TargetError, match="compiled under"):
+            compiler_lib.compile(
+                cfg, params,
+                HardwareTarget(engine="tiled", mapping_policy="greedy"),
+                plan=plan,
+            )
+        # the matching spelling stays valid
+        cm = compiler_lib.compile(
+            cfg, params,
+            HardwareTarget(engine="tiled", mapping_policy="tacitmap"),
+            plan=plan,
+        )
+        assert cm.plan is plan
+
+    def test_mesh_axis_on_non_tiled_engine(self):
+        """Only the tiled engine's tile axis consumes the hint today; a
+        target naming it elsewhere must not silently drop it."""
+        with pytest.raises(TargetError, match="mesh_axis"):
+            HardwareTarget(engine="wdm", mesh_axis="model").validate()
+
+    def test_mesh_axis_threads_to_tiled_engine(self, model):
+        cfg, params, _ = model
+        cm = compiler_lib.compile(
+            cfg, params,
+            HardwareTarget(engine="tiled", mapping_policy="greedy",
+                           mesh_axis="x"),
+        )
+        assert cm.engine.mesh_axis == "x"
+
+    def test_adhoc_fallback_policy_follows_bound_plan(self, model):
+        """With plan= and no explicit target policy, the engine's ad-hoc
+        fallback placements and the pinned cfg.mapping_policy must both
+        follow the PLAN's policy (not the pre-compile config's)."""
+        cfg, params, _ = model
+        plan = compile_plan(cfg, policy="greedy")
+        cm = compiler_lib.compile(
+            cfg, params, HardwareTarget(engine="tiled"), plan=plan
+        )
+        assert cm.engine.policy == "greedy"
+        assert cm.cfg.mapping_policy == "greedy"
+
+    def test_plan_budget_conflict(self, model):
+        cfg, params, _ = model
+        plan = compile_plan(cfg, policy="greedy", tile_budget=4)
+        with pytest.raises(TargetError, match="tile_budget"):
+            compiler_lib.compile(
+                cfg, params,
+                HardwareTarget(engine="tiled", tile_budget=8),
+                plan=plan,
+            )
+
+    def test_group_size_over_plan_capacity(self, model):
+        cfg, params, _ = model
+        plan = compile_plan(cfg, spec=OPCM_TILE, policy="greedy")
+        assert plan.preferred_group_size() == 16
+        with pytest.raises(GroupSizeError, match="WDM capacity"):
+            compiler_lib.compile(
+                cfg, params,
+                HardwareTarget(engine="tiled", group_size=64),
+                plan=plan,
+            )
+
+    def test_group_size_over_wdm_capacity(self, model):
+        cfg, params, _ = model
+        with pytest.raises(GroupSizeError, match="wavelengths"):
+            compiler_lib.compile(
+                cfg, params, HardwareTarget(engine="wdm", group_size=999)
+            )
+
+    def test_degenerate_knobs(self):
+        with pytest.raises(GroupSizeError):
+            HardwareTarget(engine="wdm", group_size=-1).validate()
+        with pytest.raises(TargetError, match="tile_budget"):
+            HardwareTarget(engine="tiled", tile_budget=0).validate()
+        # 0 is the CLI's auto convention, normalized to None
+        assert HardwareTarget(group_size=0).group_size is None
+
+    def test_encdec_rejected(self):
+        cfg = get_smoke_config("seamless-m4t-large-v2")
+        with pytest.raises(TargetError, match="decoder-only"):
+            compiler_lib.compile(cfg, None, HardwareTarget(engine="wdm"))
+
+
+# ---------------------------------------------------------------------------
+# Price-only compilation + reports
+# ---------------------------------------------------------------------------
+
+
+class TestPricing:
+    def test_price_only_compile(self, model):
+        cfg, _, _ = model
+        cm = compiler_lib.compile(
+            cfg, None, HardwareTarget(engine="tiled", mapping_policy="greedy")
+        )
+        price = cm.price()
+        assert price.n_tiles == cm.plan.n_tiles
+        assert price.latency_s > 0 and price.energy_j > 0
+        assert price.programming_uj > 0 and price.tick_energy_pj > 0
+        assert price.break_even_ticks > 0
+        assert "us/inf" in price.summary()
+        # execution without params is a named error, not a crash
+        with pytest.raises(TargetError, match="without params"):
+            cm.serve(max_batch=2, max_len=16)
+        with pytest.raises(TargetError, match="without params"):
+            cm.prefill(jnp.zeros((1, 4), jnp.int32))
+
+    def test_reference_target_prices_the_mapping(self, model):
+        """Pricing is static: a plain-jnp target still prices the
+        paper's mapping of the binarized stack (lazily compiled)."""
+        cfg, _, _ = model
+        cm = compiler_lib.compile(cfg, None, HardwareTarget())
+        assert cm.plan is None
+        assert cm.price().n_tiles > 0
+
+    def test_describe_names_the_pipeline(self, model):
+        cfg, params, _ = model
+        cm = compiler_lib.compile(
+            cfg, params, HardwareTarget(engine="tiled", mapping_policy="greedy")
+        )
+        text = cm.describe()
+        assert "policy=greedy" in text
+        assert "[mapping]" in text and "[price]" in text
+        assert "resident" in text  # the programming phase is reported
+
+    def test_wdm_k_divides_priced_latency(self, model):
+        cfg, _, _ = model
+        def lat(k):
+            spec = dataclasses.replace(OPCM_TILE, wdm_k=k)
+            cm = compiler_lib.compile(
+                cfg, None,
+                HardwareTarget(engine="tiled", spec=spec, mapping_policy="tacitmap"),
+            )
+            return cm.price().latency_s
+        assert lat(16) < lat(4) <= lat(1)
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine: CompiledModel front door + deprecation shim
+# ---------------------------------------------------------------------------
+
+
+class TestServingShim:
+    def test_shim_equals_compiled(self, model):
+        cfg, params, prompts = model
+        with pytest.warns(DeprecationWarning, match="HardwareTarget"):
+            legacy = _serve_gens(
+                ServingEngine(cfg, params, max_batch=2, max_len=24,
+                              engine="wdm", group_size=2),
+                prompts,
+            )
+        new = _serve_gens(
+            compiler_lib.compile(
+                cfg, params, HardwareTarget(engine="wdm", group_size=2)
+            ).serve(max_batch=2, max_len=24),
+            prompts,
+        )
+        assert legacy == new
+
+    def test_plain_construction_does_not_warn(self, model):
+        cfg, params, _ = model
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            se = ServingEngine(cfg, params, max_batch=2, max_len=16)
+        assert se.group_k == 2 and se._exec is None
+
+    def test_compiled_plus_legacy_kwargs_rejected(self, model):
+        cfg, params, _ = model
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
+        with pytest.raises(TypeError, match="EITHER"):
+            ServingEngine(cm, params, max_batch=2)
+        with pytest.raises(TypeError, match="EITHER"):
+            ServingEngine(cm, engine="wdm", max_batch=2)
+
+    def test_serving_engine_exposes_compiled(self, model):
+        cfg, params, _ = model
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
+        se = ServingEngine(cm, max_batch=2, max_len=16)
+        assert se.compiled is cm
+        assert se.stats["programmed"] == cm.programmed
+        assert se.cfg.bnn_engine == "wdm" and se.cfg.quant == "bnn"
+
+    def test_shim_invalid_combo_raises_named_error(self, model):
+        """The silent mapping_plan drop is gone even via the shim."""
+        cfg, params, _ = model
+        plan = compile_plan(cfg, policy="greedy")
+        with pytest.raises(PlanEngineMismatchError):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                ServingEngine(cfg, params, max_batch=2, max_len=16,
+                              engine="wdm", mapping_plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Shared CLI surface
+# ---------------------------------------------------------------------------
+
+
+class TestCLI:
+    def _parse(self, argv):
+        ap = argparse.ArgumentParser()
+        add_target_args(ap)
+        return ap.parse_args(argv)
+
+    def test_round_trip(self):
+        t = target_from_args(self._parse([
+            "--engine", "tiled", "--mapping-policy", "greedy",
+            "--tile-budget", "64", "--group-size", "4", "--raw-weights",
+        ]))
+        assert t == HardwareTarget(
+            engine="tiled", mapping_policy="greedy", tile_budget=64,
+            group_size=4, prepare_weights=False,
+        )
+
+    def test_defaults_are_the_reference_target(self):
+        t = target_from_args(self._parse([]))
+        assert t == HardwareTarget()
+        assert t.group_size is None and t.prepare_weights
+
+    def test_typoed_engine_fails_at_argparse_time(self, capsys):
+        with pytest.raises(SystemExit):
+            self._parse(["--engine", "packedd"])
+        assert "invalid choice" in capsys.readouterr().err
+
+    def test_inconsistent_combo_fails_validation(self):
+        with pytest.raises(PlanEngineMismatchError):
+            target_from_args(self._parse(["--engine", "wdm",
+                                          "--mapping-policy", "greedy"]))
+
+    def test_mesh_axis_recorded(self):
+        t = HardwareTarget(engine="tiled", mesh_axis="model")
+        assert t.mesh_axis == "model" and "mesh_axis=model" in t.describe()
