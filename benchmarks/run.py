@@ -27,6 +27,9 @@ Sections:
  11. compiler       — one-call hardware-compilation round trip
                       (compile -> prefill/decode/serve bit-exactness
                       per target + the price-only DSE seam)
+ 12. kernels        — fused decode-tick kernel gate: fused vs unfused
+                      packed wall time (kernel level + serving ticks)
+                      with bit-exactness required at both levels
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -52,6 +55,7 @@ SECTIONS = (
     "mapping",
     "serving_latency",
     "compiler",
+    "kernels",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -120,6 +124,7 @@ def main(argv: list[str] | None = None) -> int:
         compiler,
         dse,
         kernel_bench,
+        kernels_fused,
         mapping,
         multilevel,
         paper_energy,
@@ -165,6 +170,9 @@ def main(argv: list[str] | None = None) -> int:
     if "compiler" in wanted:
         c_rc, payload = compiler.run(smoke=args.smoke)
         rc |= record("compiler", c_rc, payload)
+    if "kernels" in wanted:
+        k_rc, payload = kernels_fused.run(smoke=args.smoke)
+        rc |= record("kernels", k_rc, payload)
 
     if args.out:
         doc = {"smoke": args.smoke, "rc": rc, "sections": results}

@@ -38,14 +38,13 @@ def _timed_step(se) -> float:
     return time.perf_counter() - t0
 
 
-def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
+def _bench_model(max_batch: int, prompt_len: int):
+    """The shared smoke LM + prompt set every paired sweep serves."""
     import jax
     import numpy as np
 
-    from repro import compiler as compiler_lib
     from repro.configs import get_smoke_config
     from repro.models import lm as lm_lib
-    from repro.serving import Request
 
     cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
     params = lm_lib.init_params(jax.random.key(0), cfg)
@@ -54,57 +53,137 @@ def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
         rng.integers(1, cfg.vocab_size, (prompt_len,), dtype=np.int32)
         for _ in range(max_batch)
     ]
+    return cfg, params, prompts
+
+
+def _paired_servers(cfg, params, prompts, variants, *, max_batch, prompt_len,
+                    warmup, ticks, budget):
+    """Serve one engine per target variant and time their decode ticks
+    INTERLEAVED (a, b, a, b, ...): the structural delta is the per-tick
+    graph difference, and interleaving cancels machine drift that
+    sequential phases would alias into the comparison. Each (a, b) tick
+    pair is adjacent in time, so the per-pair difference is the robust
+    statistic — a noise spike only perturbs one pair.
+
+    ``variants`` is an ordered {label: HardwareTarget}; returns
+    ({label: server}, {label: [tick seconds]}).
+    """
+    from repro import compiler as compiler_lib
+    from repro.serving import Request
+
+    pair = {}
+    for label, tgt in variants.items():
+        se = compiler_lib.compile(cfg, params, tgt).serve(
+            max_batch=max_batch, max_len=prompt_len + budget + 2
+        )
+        for i, p in enumerate(prompts):
+            se.submit(Request(rid=i, prompt=p, max_new_tokens=budget))
+        # first steps admit+prefill+compile; excluded from timing
+        for _ in range(warmup):
+            se.step()
+        pair[label] = se
+    times: dict[str, list[float]] = {label: [] for label in pair}
+    for _ in range(ticks):
+        for label, se in pair.items():
+            times[label].append(_timed_step(se))
+    return pair, times
+
+
+def _slot_gens(se):
+    """Per-slot generated-token streams (same admission order across a
+    pair, so equal dicts == bit-identical decode)."""
+    return {
+        slot: tuple(r.generated)
+        for slot, r in enumerate(se.slot_req)
+        if r is not None
+    }
+
+
+def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
+    cfg, params, prompts = _bench_model(max_batch, prompt_len)
     budget = warmup + ticks + 2  # slots stay active through the window
 
     rows = []
     for target in targets:
         row = {"engine": target.engine, "k": target.group_size}
-        # both paths built up-front and their decode ticks timed
-        # INTERLEAVED (prep, raw, prep, raw, ...): the structural
-        # delta is the per-tick weight-side work, and interleaving
-        # cancels machine drift that sequential phases would alias
-        # into the comparison. The prepared/raw pair is the SAME
-        # target with prepare_weights flipped — the one-knob ablation
-        # the HardwareTarget makes explicit.
-        pair = {}
-        for prepared in (True, False):
-            se = compiler_lib.compile(
-                cfg, params,
-                dataclasses.replace(target, prepare_weights=prepared),
-            ).serve(max_batch=max_batch, max_len=prompt_len + budget + 2)
-            for i, p in enumerate(prompts):
-                se.submit(Request(rid=i, prompt=p, max_new_tokens=budget))
-            # first steps admit+prefill+compile; excluded from timing
-            for _ in range(warmup):
-                se.step()
-            pair["prepared" if prepared else "raw"] = se
-        times: dict[str, list[float]] = {"prepared": [], "raw": []}
-        for _ in range(ticks):
-            times["prepared"].append(_timed_step(pair["prepared"]))
-            times["raw"].append(_timed_step(pair["raw"]))
-        for label, se in pair.items():
+        # The prepared/raw pair is the SAME target with prepare_weights
+        # flipped — the one-knob ablation the HardwareTarget makes
+        # explicit (raw re-runs map_weights/bit-packing per tick).
+        pair, times = _paired_servers(
+            cfg, params, prompts,
+            {
+                "prepared": target,
+                "raw": dataclasses.replace(target, prepare_weights=False),
+            },
+            max_batch=max_batch, prompt_len=prompt_len,
+            warmup=warmup, ticks=ticks, budget=budget,
+        )
+        for label in pair:
             row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
-        # the robust statistic: each (prepared, raw) tick pair is
-        # adjacent in time, so the per-pair difference cancels drift
-        # and a noise spike only perturbs one pair — the gate pools
-        # these deltas per engine
         row["paired_deltas_ms"] = [
             (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
         ]
         row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
         row["programmed"] = pair["prepared"].stats["programmed"]
         row["program_ms"] = pair["prepared"].stats["program_s"] * 1e3
-        # same admission order both runs: compare per-slot streams
-        gens = {
-            label: {
-                slot: tuple(r.generated)
-                for slot, r in enumerate(se.slot_req)
-                if r is not None
-            }
-            for label, se in pair.items()
-        }
+        gens = {label: _slot_gens(se) for label, se in pair.items()}
         row["speedup"] = row["tick_ms_raw"] / max(row["tick_ms_prepared"], 1e-9)
         row["exact"] = gens["prepared"] == gens["raw"] and bool(gens["prepared"])
+        rows.append(row)
+    return rows
+
+
+def fused_sweep(ks, *, max_batch, prompt_len, warmup, ticks,
+                d_model=512, d_ff=1024):
+    """Fused vs unfused packed decode ticks, per K.
+
+    Same target with ``fused`` flipped: the fused path runs each
+    prepared projection as ONE ``kernels/fused_decode.py`` launch (with
+    q/k/v sharing a single launch over the concatenated artifact); the
+    unfused baseline keeps the PR-4 chain — binarize, ``pack_bits``,
+    Hamming kernel, affine correction and rescale as separate ops, three
+    of everything for q/k/v. Decode streams must stay bit-identical.
+
+    The sweep widens the smoke LM to ``d_model``/``d_ff`` (default
+    512/1024): at the smoke width (d=64 -> 2 packed words per row) every
+    launch is pinned to the interpreter's fixed per-call floor and the
+    pooled delta is sign-flipping noise, while at 512/1024 the
+    structural difference — one launch vs binarize/pack/Hamming/rescale
+    chains, three of them for q/k/v — dominates that floor and the gate
+    measures the kernel rather than the harness.
+    """
+    import jax
+
+    from repro.compiler import HardwareTarget
+    from repro.models import lm as lm_lib
+
+    cfg, params, prompts = _bench_model(max_batch, prompt_len)
+    cfg = dataclasses.replace(cfg, d_model=d_model, d_ff=d_ff)
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    budget = warmup + ticks + 2
+
+    rows = []
+    for k in ks:
+        target = HardwareTarget(engine="packed", group_size=k)
+        pair, times = _paired_servers(
+            cfg, params, prompts,
+            {
+                "fused": target,
+                "unfused": dataclasses.replace(target, fused=False),
+            },
+            max_batch=max_batch, prompt_len=prompt_len,
+            warmup=warmup, ticks=ticks, budget=budget,
+        )
+        row = {"engine": "packed", "k": k}
+        for label in pair:
+            row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
+        row["paired_deltas_ms"] = [
+            (u - f) * 1e3 for f, u in zip(times["fused"], times["unfused"])
+        ]
+        row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
+        gens = {label: _slot_gens(se) for label, se in pair.items()}
+        row["speedup"] = row["tick_ms_unfused"] / max(row["tick_ms_fused"], 1e-9)
+        row["exact"] = gens["fused"] == gens["unfused"] and bool(gens["fused"])
         rows.append(row)
     return rows
 
@@ -183,6 +262,30 @@ def run(smoke: bool = False, engines=None, ks=None) -> tuple[int, dict]:
     print("(raw re-runs the weight-side transforms inside every decode tick; "
           "prepared programs them once at engine bind — the CIM premise)")
 
+    # fused-vs-unfused packed decode tick: the PR-6 fused decode-tick
+    # kernel against the multi-op baseline, same pooled-median gate
+    fused_rows = fused_sweep(ks, **sizes) if "packed" in engines else []
+    fused_deltas = [d for r in fused_rows for d in r["paired_deltas_ms"]]
+    fused_exact = all(r["exact"] for r in fused_rows) if fused_rows else True
+    fused_faster = (
+        statistics.median(fused_deltas) > 0 if fused_deltas else None
+    )
+    if fused_rows:
+        print("\n== packed decode tick: fused kernel vs unfused baseline ==")
+        print(f"{'K':>3s} {'fused_ms':>9s} {'unfused_ms':>11s} {'speedup':>8s} "
+              f"{'pair_d_ms':>10s} {'exact':>6s}")
+        for r in fused_rows:
+            print(f"{r['k']:3d} {r['tick_ms_fused']:9.2f} "
+                  f"{r['tick_ms_unfused']:11.2f} {r['speedup']:7.2f}x "
+                  f"{r['paired_delta_ms']:10.3f} {str(r['exact']):>6s}")
+        print(f"fused strictly faster (pooled median across K): {fused_faster}; "
+              f"bit-exact fused vs unfused: {fused_exact}")
+        print("(fused: binarize+pack+XNOR+popcount+affine+rescale in one "
+              "kernel launch, q/k/v sharing one pass; unfused: the same "
+              "steps as separate per-projection XLA ops)")
+    else:
+        print("\nfused-vs-unfused gate SKIPPED ('packed' not swept)")
+
     layer, modeled = modeled_programming()
     print(f"\n== modeled one-time programming vs per-tick readout "
           f"({layer.m}x{layer.n} FC, 16 active slots) ==")
@@ -195,12 +298,18 @@ def run(smoke: bool = False, engines=None, ks=None) -> tuple[int, dict]:
     print("(PCM writes cost ~10^4 reads; the write amortizes over the decode "
           "stream — the prepared-weights contract is that amortization in software)")
 
-    rc = 0 if (exact and faster is not False) else 1
+    rc = 0 if (
+        exact and faster is not False
+        and fused_exact and fused_faster is not False
+    ) else 1
     payload = {
         "measured": rows,
         "modeled": {"layer": {"m": layer.m, "n": layer.n}, "designs": modeled},
         "prepared_strictly_faster": faster,
         "bit_exact": exact,
+        "fused": fused_rows,
+        "fused_strictly_faster": fused_faster,
+        "fused_bit_exact": fused_exact,
     }
     return rc, payload
 

@@ -84,6 +84,9 @@ def resolve_engine(target: HardwareTarget, cfg=None, plan=None):
     if target.engine in ("", "reference"):
         return None
     kw = {}
+    if target.engine == "packed":
+        # fused decode-tick kernel vs the unfused multi-op baseline
+        kw = {"fused": target.fused}
     if target.engine == "tiled":
         # ad-hoc fallback placements (projection shapes absent from the
         # plan) must land under the SAME policy the plan/config reports:
@@ -325,8 +328,15 @@ class CompiledModel:
             prefill = jax.jit(
                 lambda p, t, e: lm_lib.prefill(p, t, cfg, e, engine=ex)
             )
+            # donate the KV-cache pytree: tick N's caches update in
+            # place instead of being copied (decode_step returns the
+            # same-shaped new caches, so XLA aliases input to output).
+            # Callers must treat the passed caches as CONSUMED and carry
+            # the returned pytree forward — every serving loop already
+            # does (``logits, caches = decode_step(...)``).
             decode = jax.jit(
-                lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg, engine=ex)
+                lambda p, t, pos, c: lm_lib.decode_step(p, t, pos, c, cfg, engine=ex),
+                donate_argnums=(3,),
             )
             self._jit[k] = (ex, prefill, decode)
         return self._jit[k]
@@ -340,7 +350,12 @@ class CompiledModel:
 
     def decode_step(self, token, pos, caches):
         """Jitted single-token decode through the target's executor:
-        token (B,), pos scalar or (B,), caches -> (logits, new caches)."""
+        token (B,), pos scalar or (B,), caches -> (logits, new caches).
+
+        ``caches`` is DONATED: its buffers are updated in place and the
+        input pytree must not be reused after the call — carry the
+        returned caches forward (``logits, caches = decode_step(...)``).
+        """
         self._require_params()
         _, _, decode = self._fns(self.group_size_for(int(token.shape[0])))
         return decode(self.params, token, pos, caches)

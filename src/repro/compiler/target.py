@@ -70,6 +70,12 @@ class HardwareTarget:
       over. Recorded on the target (a mesh is one more field of the
       target, not a sixth ad-hoc knob); today only the ``tiled``
       engine's tile axis consumes it via ``distributed.hints``.
+    * ``fused`` — route prepared binarized projections through the
+      fused decode-tick kernel (``kernels/fused_decode.py``: binarize +
+      bit-pack + XNOR + popcount + Eq. 1 affine + α/β rescale in one
+      launch) on engines that support it (``packed``). ``False`` keeps
+      the unfused multi-op path — the benchmark baseline. Bit-exact
+      either way.
     """
 
     engine: str = "reference"
@@ -79,6 +85,7 @@ class HardwareTarget:
     group_size: int | None = None
     prepare_weights: bool = True
     mesh_axis: str | None = None
+    fused: bool = True
 
     def __post_init__(self):
         # normalize the CLI's "0 = auto" convention to None
@@ -128,6 +135,13 @@ class HardwareTarget:
             raise GroupSizeError(
                 f"group_size must be >= 1 (or None for auto), got {self.group_size}"
             )
+        if not self.fused and self.engine != "packed":
+            raise TargetError(
+                f"fused=False selects the unfused baseline of the 'packed' "
+                f"engine's fused decode-tick kernel, but the target's engine "
+                f"is {self.engine!r} — the knob would be silently dropped "
+                "(no other engine has a fused path to disable)"
+            )
         if self.mesh_axis is not None and self.engine != "tiled":
             raise TargetError(
                 f"mesh_axis={self.mesh_axis!r} names the mesh axis the "
@@ -155,6 +169,8 @@ class HardwareTarget:
             parts.append(f"tile_budget={self.tile_budget}")
         parts.append(f"K={'auto' if self.group_size is None else self.group_size}")
         parts.append(f"prepared={self.prepare_weights}")
+        if self.engine == "packed":
+            parts.append(f"fused={self.fused}")
         if self.mesh_axis is not None:
             parts.append(f"mesh_axis={self.mesh_axis}")
         return "[target] " + " ".join(parts)

@@ -495,6 +495,16 @@ class PackedEngine(_EngineBase):
     backend is testable everywhere; on TPU it compiles. ``prepare``
     holds the weight words resident (``ops.pack_weights``) so only the
     activation side packs per call.
+
+    ``fused=True`` (the default) additionally advertises the fused
+    decode-tick capability: :meth:`fused_dense` runs the whole BitLinear
+    seam — binarize + bit-pack + XNOR + popcount + Eq. 1 affine + α/β
+    rescale — as ONE ``kernels/fused_decode.py`` launch against prepared
+    weights; ``fused=False`` keeps the unfused multi-op path as the
+    benchmark baseline. ``prepad=True`` makes ``prepare`` emit weight
+    words already padded to kernel block multiples
+    (``ops.pad_packed_weights``) so the execute-phase re-pad is a no-op;
+    results are bit-identical either way.
     """
 
     info = EngineInfo(
@@ -504,23 +514,58 @@ class PackedEngine(_EngineBase):
         packed=True,
     )
 
-    def __init__(self, spec: CrossbarSpec | None = None, *, interpret: bool | None = None):
+    def __init__(
+        self,
+        spec: CrossbarSpec | None = None,
+        *,
+        interpret: bool | None = None,
+        fused: bool = True,
+        prepad: bool = False,
+    ):
         super().__init__(spec)
         self.interpret = interpret
+        self.fused = bool(fused)
+        self.prepad = bool(prepad)
 
     def with_spec(self, spec: CrossbarSpec) -> "PackedEngine":
-        return type(self)(spec, interpret=self.interpret)
+        return type(self)(
+            spec, interpret=self.interpret, fused=self.fused, prepad=self.prepad
+        )
 
     def _program(self, w_signs: Array):
         from repro.kernels import ops
 
-        return ops.pack_weights(w_signs)
+        wp = ops.pack_weights(w_signs)
+        return ops.pad_packed_weights(wp) if self.prepad else wp
 
     def _vmm_prepared(self, a_signs: Array, pw: PreparedWeights) -> Array:
         from repro.kernels import ops
 
         return ops.xnor_matmul_packed_weights(
             a_signs, pw.data, m=pw.m, n=pw.n, interpret=self.interpret
+        )
+
+    @property
+    def supports_fused_dense(self) -> bool:
+        """Capability flag the BitLinear seam (``models.layers.dense``)
+        probes before routing raw activations through the fused kernel."""
+        return self.fused
+
+    def fused_dense(self, x: Array, pw: PreparedWeights, alpha: Array) -> Array:
+        """Whole BitLinear against prepared weights in one kernel launch.
+
+        (..., m) RAW activations (not pre-binarized) x prepared words x
+        alpha (scalar, or (n,) for concatenated fused projections) ->
+        (..., n) fp32 of ``(binarize(x) @ w±1) * (alpha * mean|x|)`` —
+        bit-exact vs the unfused binarize/pack/matmul/rescale chain.
+        Leading dims flatten, so the serving engine's stacked (G, K, m)
+        grouped activations are one launch.
+        """
+        from repro.kernels import ops
+
+        pw = self._check_operands(x, self._check_prepared(pw))
+        return ops.fused_bnn_matmul(
+            x, pw.data, alpha, m=pw.m, n=pw.n, interpret=self.interpret
         )
 
     def steps_for(self, m: int, n: int, n_inputs: int) -> int:
@@ -808,6 +853,16 @@ class GroupedEngine:
 
     def binary_mmm(self, groups: Array, w) -> Array:
         return self.base.binary_mmm(groups, w)
+
+    @property
+    def supports_fused_dense(self) -> bool:
+        return getattr(self.base, "supports_fused_dense", False)
+
+    def fused_dense(self, x: Array, pw, alpha) -> Array:
+        """Fused BitLinear passes straight through: the fused kernel
+        flattens leading dims itself, so a stacked (G, K, m) group is
+        already one launch — no pad-to-K bookkeeping needed."""
+        return self.base.fused_dense(x, pw, alpha)
 
     def with_spec(self, spec: CrossbarSpec) -> "GroupedEngine":
         return GroupedEngine(resolve(self.base, spec), self.k)

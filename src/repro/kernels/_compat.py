@@ -1,4 +1,4 @@
-"""Version shims for the Pallas TPU API surface.
+"""Version shims + shared helpers for the Pallas TPU API surface.
 
 ``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
 ``CompilerParams`` across JAX releases; the kernels in this package run
@@ -7,7 +7,29 @@ on both spellings via this alias.
 
 from __future__ import annotations
 
+import functools
+
 import jax.experimental.pallas.tpu as pltpu
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """True when the default JAX backend is CPU.
+
+    The Pallas kernels target TPU; off-TPU they run in interpret mode so
+    the whole suite is testable anywhere. The backend probe touches the
+    platform registry, so it is memoized here once per process instead
+    of being re-evaluated on every kernel call (it was previously inlined
+    in each wrapper).
+    """
+    import jax
+
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``interpret=None`` means "interpret iff running on CPU"."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 CompilerParams = getattr(
     pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)

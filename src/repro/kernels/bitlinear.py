@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 Array = jax.Array
 
@@ -55,12 +55,16 @@ def bitlinear(
     >= 0 or exactly 0 — they binarize to +1 and hit zero pad *rows* of
     ``w`` (the ops wrapper pads w with zeros), contributing 0.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     B, M = x.shape
     M2, N = w_signs.shape
-    assert M == M2
-    assert B % bb == 0 and N % bn == 0 and M % bm == 0
+    if M != M2:
+        raise ValueError(f"contraction mismatch: x has {M} cols, w {M2} rows")
+    if B % bb or N % bn or M % bm:
+        raise ValueError(
+            f"operands must be pre-padded to block multiples: shape "
+            f"({B}, {M}) x ({M}, {N}) vs blocks bb={bb}, bn={bn}, bm={bm}"
+        )
     grid = (B // bb, N // bn, M // bm)
     return pl.pallas_call(
         _bitlinear_kernel,

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 Array = jax.Array
 
@@ -103,8 +103,7 @@ def flash_attention(
     kvh, skv = k.shape[1], k.shape[2]
     g = h // kvh
     scale = 1.0 / math.sqrt(d)
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
 
     bq_ = min(bq, max(sq, 8))
     bk_ = min(bk, max(skv, 8))

@@ -12,7 +12,9 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import _compat
 from repro.kernels import bitlinear as _bitlinear_kernel
+from repro.kernels import fused_decode as _fused_kernel
 from repro.kernels import wdm_mmm as _wdm_kernel
 from repro.kernels import xnor_matmul as _xnor_kernel
 
@@ -57,6 +59,25 @@ def pack_weights(w_signs: Array) -> Array:
     stream only activations through :func:`xnor_matmul_packed_weights`.
     """
     return pack_bits((w_signs > 0).astype(jnp.uint32), axis=0)
+
+
+def pad_packed_weights(
+    w_packed: Array,
+    *,
+    bkw: int = _xnor_kernel.DEFAULT_BKW,
+    bn: int = _xnor_kernel.DEFAULT_BN,
+) -> Array:
+    """Pre-pad packed weight words to kernel block multiples at *program*
+    time: (KW, n) -> (ceil(KW/bkw)*bkw, ceil(n/bn)*bn), zero pad words.
+
+    The execute-phase wrappers re-pad every call; ``_pad_to`` is a no-op
+    on already-aligned operands, so paying the padding once here removes
+    the per-tick ``jnp.pad`` of the (large) weight side from the decode
+    graph. Zero pad words XOR to zero against zero activation pad bits
+    and drop out of the Hamming sum, and the wrappers slice with the
+    *logical* ``m``/``n``, so results are bit-identical either way.
+    """
+    return _pad_to(_pad_to(w_packed, bkw, 0), bn, 1)
 
 
 def _pad_to(x: Array, mult: int, axis: int) -> Array:
@@ -146,6 +167,98 @@ def xnor_matmul(
         bkw=bkw,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused BNN decode tick (binarize + pack + XNOR + popcount + scale)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "bm", "bn", "bkw", "interpret"))
+def fused_bnn_matmul(
+    x: Array,
+    w_packed: Array,
+    alpha: Array,
+    *,
+    m: int,
+    n: int,
+    bm: int = _fused_kernel.DEFAULT_BM,
+    bn: int = _fused_kernel.DEFAULT_BN,
+    bkw: int = _fused_kernel.DEFAULT_BKW,
+    interpret: bool | None = None,
+) -> Array:
+    """Whole fused BitLinear against prepared weights, one kernel launch.
+
+    (..., m) raw fp x (ceil(m/32), n) words x alpha -> (..., n) fp32 of
+    ``(binarize(x) @ w±1) * (alpha * beta)`` with ``beta = mean|x|`` per
+    row — the full ``models.layers.dense`` BNN seam fused into a single
+    ``pallas_call`` (binarize, bit-pack, XNOR+popcount, Eq. 1 affine
+    correction and rescale all happen in VMEM; the raw activation block
+    crosses HBM exactly once). Leading dims flatten, so the serving
+    engine's stacked (G, K, m) grouped activations are one launch.
+
+    ``alpha`` is a scalar (one per-tensor scale) or an (n,) vector (the
+    concatenated [q|k|v] fused projection). ``beta`` is computed here
+    with the same f32 expression as ``dense`` so the fused path is
+    bit-exact vs the unfused reference. Activation feature padding uses
+    -1.0: pad columns binarize to bit 0 and drop out of the Hamming sum
+    against the zero weight pad words.
+    """
+    lead = x.shape[:-1]
+    beta = jnp.mean(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True)
+    x2 = x.reshape(-1, m).astype(jnp.float32)
+    rows = x2.shape[0]
+    beta2 = beta.reshape(rows, 1)
+    alpha2 = jnp.broadcast_to(
+        jnp.asarray(alpha, jnp.float32).reshape(-1), (n,)
+    ).reshape(1, n)
+
+    kw = math.ceil(m / WORD)
+    # ``w_packed`` may arrive pre-padded to block multiples (the packed
+    # engine's ``prepad`` programming layout) — treat its stored word
+    # rows as the contraction extent; extra rows are zero pad words the
+    # -1.0 activation pads cancel against.
+    kw_w = w_packed.shape[0]
+    if kw_w < kw:
+        raise ValueError(
+            f"prepared weights carry {kw_w} words but m={m} needs {kw}"
+        )
+    # Block-size policy. Blocking exists for VMEM locality; the CPU
+    # interpreter (CI) has no VMEM and instead pays a large fixed cost
+    # PER GRID STEP, so there the fastest launch is a single-step grid
+    # covering the whole operand (capped at 128 words to bound the
+    # statically unrolled popcount loop). Compiled TPU keeps the real
+    # block tiling: words are the sublane dim of the weight block, so
+    # blocks stay multiples of 8 (lanes 8*32=256 stay 128-aligned).
+    if _compat.resolve_interpret(interpret) and kw_w <= 128:
+        bm_eff, bn, bkw = rows, w_packed.shape[1], kw_w
+    else:
+        bm_eff = _row_block(bm, rows)
+        # Clamp the contraction word-block to the operand: the fused
+        # kernel binarizes + packs its activation block IN-kernel, so
+        # every padded word costs 32 fp32 pad columns of packing work
+        # per grid step — far pricier than the zero pad-words of the
+        # packed-operand kernel. A narrow model (kw=2 vs the default
+        # bkw=16) would otherwise spend 8x the packing on dead columns.
+        bkw = min(bkw, max(8, -(-kw_w // 8) * 8))
+    kw_pad = -(-kw_w // bkw) * bkw
+    # feature pads binarize to bit 0 (negative); pad rows are sliced away
+    x2 = jnp.pad(
+        x2, [(0, (-rows) % bm_eff), (0, kw_pad * WORD - m)], constant_values=-1.0
+    )
+    wp = _pad_to(_pad_to(w_packed, bkw, 0), bn, 1)
+    out = _fused_kernel.fused_bnn_matmul_kernel(
+        x2,
+        wp,
+        _pad_to(alpha2, bn, 1),
+        _pad_to(beta2, bm_eff, 0),
+        m=m,
+        bm=bm_eff,
+        bn=bn,
+        bkw=bkw,
+        interpret=interpret,
+    )
+    return out[:rows, :n].reshape(*lead, n)
 
 
 # ---------------------------------------------------------------------------

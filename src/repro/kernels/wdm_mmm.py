@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 Array = jax.Array
 
@@ -51,12 +51,16 @@ def mmm(
 
     Operands must be pre-padded to block multiples (ops wrapper).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     B, M = lhs.shape
     M2, N = rhs.shape
-    assert M == M2
-    assert B % bb == 0 and N % bn == 0 and M % bm == 0, (B, M, N, bb, bm, bn)
+    if M != M2:
+        raise ValueError(f"contraction mismatch: lhs has {M} cols, rhs {M2} rows")
+    if B % bb or N % bn or M % bm:
+        raise ValueError(
+            f"operands must be pre-padded to block multiples: shape "
+            f"({B}, {M}) x ({M}, {N}) vs blocks bb={bb}, bn={bn}, bm={bm}"
+        )
     grid = (B // bb, N // bn, M // bm)
     return pl.pallas_call(
         _mmm_kernel,

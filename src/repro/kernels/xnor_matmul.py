@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 Array = jax.Array
 
@@ -75,12 +75,21 @@ def hamming_matmul_packed(
     Operands must be pre-padded to multiples of the block sizes (the
     ``ops`` wrapper does this; zero pad-words are harmless).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     B, KW = a_packed.shape
     KW2, N = w_packed.shape
-    assert KW == KW2, (KW, KW2)
-    assert B % bm == 0 and N % bn == 0 and KW % bkw == 0, (B, N, KW, bm, bn, bkw)
+    # Named errors, not asserts: asserts vanish under ``python -O`` and a
+    # mismatched word count would silently corrupt the Hamming sums.
+    if KW != KW2:
+        raise ValueError(
+            f"packed word-count mismatch: activations carry {KW} int32 words "
+            f"but weights carry {KW2}"
+        )
+    if B % bm or N % bn or KW % bkw:
+        raise ValueError(
+            f"operands must be pre-padded to block multiples: shape "
+            f"({B}, {KW}) x ({KW}, {N}) vs blocks bm={bm}, bn={bn}, bkw={bkw}"
+        )
 
     grid = (B // bm, N // bn, KW // bkw)
     kernel = functools.partial(_hamming_kernel, bkw=bkw)

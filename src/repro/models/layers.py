@@ -148,30 +148,73 @@ def dense(p: Params, x: Array, quant: str = "none", engine=None) -> Array:
     """
     w = p.get("w")  # absent on programmed projections (prepared replaces it)
     if quant == "bnn":
-        beta = jnp.mean(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True)
-        xb = bnn.binarize_ste(x.astype(jnp.float32))
         pw = p.get("prepared") if engine is not None else None
-        if pw is not None:
-            alpha = p["alpha"]
-            dot = engine.binary_vmm(xb, pw).astype(jnp.float32)
+        if pw is not None and getattr(engine, "supports_fused_dense", False):
+            # Fused decode-tick path: binarize + bit-pack + XNOR +
+            # popcount + Eq. 1 affine + α/β rescale in ONE kernel launch
+            # (kernels/fused_decode.py) — the raw activation block
+            # crosses HBM exactly once. Bit-exact vs the unfused chain
+            # below; engines advertise it via ``supports_fused_dense``.
+            out = engine.fused_dense(x, pw, p["alpha"]).astype(ACT_DTYPE)
         else:
-            _require_latent(p, w, engine)
-            alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
-            if engine is None:
-                dot = xb @ bnn.binarize_ste(w)
-            elif hasattr(engine, "prepare_cached"):
-                # lazy: binarization runs only on a weight-cache miss
-                wx = engine.prepare_cached(lambda: bnn.binarize_ste(w), key=w)
-                dot = engine.binary_vmm(xb, wx).astype(jnp.float32)
+            beta = jnp.mean(jnp.abs(x).astype(jnp.float32), axis=-1, keepdims=True)
+            xb = bnn.binarize_ste(x.astype(jnp.float32))
+            if pw is not None:
+                alpha = p["alpha"]
+                dot = engine.binary_vmm(xb, pw).astype(jnp.float32)
             else:
-                dot = engine.binary_vmm(xb, bnn.binarize_ste(w)).astype(jnp.float32)
-        out = (dot * (alpha * beta)).astype(ACT_DTYPE)
+                _require_latent(p, w, engine)
+                alpha = jnp.mean(jnp.abs(w)).astype(jnp.float32)
+                if engine is None:
+                    dot = xb @ bnn.binarize_ste(w)
+                elif hasattr(engine, "prepare_cached"):
+                    # lazy: binarization runs only on a weight-cache miss
+                    wx = engine.prepare_cached(lambda: bnn.binarize_ste(w), key=w)
+                    dot = engine.binary_vmm(xb, wx).astype(jnp.float32)
+                else:
+                    dot = engine.binary_vmm(xb, bnn.binarize_ste(w)).astype(jnp.float32)
+            out = (dot * (alpha * beta)).astype(ACT_DTYPE)
     else:
         _require_latent(p, w, engine)
         out = jnp.matmul(x, w.astype(x.dtype))
     if "b" in p:
         out = out + p["b"].astype(out.dtype)
     return out
+
+
+def fused_qkv_dense(p_attn: Params, x: Array, cfg: ModelConfig, quant: str, engine):
+    """Shared-activation QKV fusion: one fused kernel over the
+    concatenated ``[q|k|v]`` prepared weights instead of three.
+
+    q/k/v all consume the same attention input, so the unfused path
+    binarizes and bit-packs that block three times. When
+    ``lm.program_weights`` has attached the derived ``qkv`` artifact
+    (the three sign matrices concatenated along the output axis before
+    packing) and the engine supports fused dense, the input streams
+    through ONE kernel launch and the output splits at the static head
+    boundaries. Column j of the fused kernel depends only on weight
+    column j, so the split halves are bit-identical to three separate
+    calls. Returns (q, k, v) pre-reshape activations, or ``None`` when
+    the fused artifact/capability is absent (callers fall back to three
+    ``dense`` calls).
+    """
+    fused = p_attn.get("qkv")
+    if (
+        quant != "bnn"
+        or fused is None
+        or engine is None
+        or not getattr(engine, "supports_fused_dense", False)
+    ):
+        return None
+    out = engine.fused_dense(x, fused["prepared"], fused["alpha"]).astype(ACT_DTYPE)
+    nq = cfg.n_heads * cfg.hd
+    nkv = cfg.n_kv_heads * cfg.hd
+    parts = (out[..., :nq], out[..., nq : nq + nkv], out[..., nq + nkv :])
+    outs = []
+    for name, o in zip(("q", "k", "v"), parts):
+        b = p_attn[name].get("b")
+        outs.append(o + b.astype(o.dtype) if b is not None else o)
+    return tuple(outs)
 
 
 def rope(x: Array, positions: Array, theta: float) -> Array:
@@ -338,11 +381,18 @@ def attention_block(
     """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
     b, s, _ = x.shape
     hd = cfg.hd
+    qkv = fused_qkv_dense(p, x, cfg, quant, engine)
+    if qkv is None:
+        qkv = (
+            dense(p["q"], x, quant, engine),
+            dense(p["k"], x, quant, engine),
+            dense(p["v"], x, quant, engine),
+        )
     # hints pin head-parallel attention over the model axis (dropped
     # per-dim when indivisible — e.g. tinyllama's 4 KV heads on tp=16)
-    q = hint(dense(p["q"], x, quant, engine).reshape(b, s, cfg.n_heads, hd), "dp", None, "model", None)
-    k = hint(dense(p["k"], x, quant, engine).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
-    v = hint(dense(p["v"], x, quant, engine).reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    q = hint(qkv[0].reshape(b, s, cfg.n_heads, hd), "dp", None, "model", None)
+    k = hint(qkv[1].reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    v = hint(qkv[2].reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     out = multi_head_attention(
@@ -393,9 +443,16 @@ def attention_decode_step(
     """
     b = x.shape[0]
     hd = cfg.hd
-    q = hint(dense(p["q"], x, quant, engine).reshape(b, 1, cfg.n_heads, hd), "dp", None, "model", None)
-    k = dense(p["k"], x, quant, engine).reshape(b, 1, cfg.n_kv_heads, hd)
-    v = dense(p["v"], x, quant, engine).reshape(b, 1, cfg.n_kv_heads, hd)
+    qkv = fused_qkv_dense(p, x, cfg, quant, engine)
+    if qkv is None:
+        qkv = (
+            dense(p["q"], x, quant, engine),
+            dense(p["k"], x, quant, engine),
+            dense(p["v"], x, quant, engine),
+        )
+    q = hint(qkv[0].reshape(b, 1, cfg.n_heads, hd), "dp", None, "model", None)
+    k = qkv[1].reshape(b, 1, cfg.n_kv_heads, hd)
+    v = qkv[2].reshape(b, 1, cfg.n_kv_heads, hd)
     pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     posb = pos_vec[:, None]
     q = rope(q, posb, cfg.rope_theta)

@@ -236,6 +236,45 @@ def loss_fn(params: Params, batch: dict, cfg: ModelConfig, aux_coef: float = 0.0
 BINARIZED_PROJECTIONS = {"attn": ("q", "k", "v", "o"), "ffn": ("w1", "w3", "w2")}
 
 
+def _fused_qkv_artifact(attn: Params, base) -> Params | None:
+    """Derived shared-activation QKV artifact for fused-dense engines.
+
+    q/k/v all consume the same attention input; engines that fuse the
+    whole BitLinear into one kernel (``supports_fused_dense``) can then
+    run ONE launch over the three sign matrices concatenated along the
+    output axis (``layers.fused_qkv_dense`` splits at the static head
+    boundaries). Packing is column-independent, so the concatenated
+    artifact is exactly the three per-projection artifacts side by side
+    — bit-identical outputs. The per-column scale vector repeats each
+    projection's scalar ``mean|w|`` across its n columns. Derived (not
+    counted in ``n_programmed``): the per-projection artifacts still
+    exist and serve every non-fused path.
+    """
+    if not all(k in attn for k in ("q", "k", "v")):
+        return None
+    wq, wk, wv = (attn[k]["w"] for k in ("q", "k", "v"))
+    prepared, alphas = [], []
+    for i in range(wq.shape[0]):
+        parts = (wq[i], wk[i], wv[i])
+        prepared.append(
+            base.prepare(bnn.binarize_ste(jnp.concatenate(parts, axis=1)))
+        )
+        alphas.append(
+            jnp.concatenate(
+                [
+                    jnp.broadcast_to(
+                        jnp.mean(jnp.abs(wi)).astype(jnp.float32), (wi.shape[1],)
+                    )
+                    for wi in parts
+                ]
+            )
+        )
+    return {
+        "prepared": jax.tree.map(lambda *xs: jnp.stack(xs), *prepared),
+        "alpha": jnp.stack(alphas),
+    }
+
+
 def program_weights(params: Params, cfg: ModelConfig, engine) -> tuple[Params, int]:
     """Crossbar-programming phase: compile every binarized projection
     into ``engine``'s resident form ONCE, before serving starts.
@@ -291,6 +330,10 @@ def program_weights(params: Params, cfg: ModelConfig, engine) -> tuple[Params, i
                 proj["alpha"] = jnp.stack(alphas)
                 sub[proj_name] = proj
                 n_programmed += int(w.shape[0])
+            if part == "attn" and getattr(base, "supports_fused_dense", False):
+                qkv = _fused_qkv_artifact(slot["attn"], base)
+                if qkv is not None:
+                    sub["qkv"] = qkv
             new_slot[part] = sub
         blocks[slot_name] = new_slot
     return dict(params, blocks=blocks), n_programmed

@@ -263,14 +263,19 @@ class ServingEngine:
             )
             return logits, caches
 
-        self._decode = jax.jit(gathered_decode)
+        # the cache pytree (argnum 3 in both decode entry points) is
+        # DONATED: tick N's caches update in place instead of being
+        # copied. `step()` immediately rebinds `self.caches` to the
+        # returned pytree, so the consumed input is never reused.
+        self._decode = jax.jit(gathered_decode, donate_argnums=(3,))
         # identity-plan fast path: with the whole pool active and no pad
         # lanes the gather/scatter is the identity — skip the two
         # O(pool * max_len) cache copies and decode in place
         self._decode_full = jax.jit(
             lambda p, tok, pos, c: lm_lib.decode_step(
                 p, tok, pos, c, cfg, engine=self._exec
-            )
+            ),
+            donate_argnums=(3,),
         )
 
     # -- client API ---------------------------------------------------------
