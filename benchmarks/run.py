@@ -30,6 +30,10 @@ Sections:
  12. kernels        — fused decode-tick kernel gate: fused vs unfused
                       packed wall time (kernel level + serving ticks)
                       with bit-exactness required at both levels
+ 13. scheduler      — request-scheduler offered-load sweep (arrival rate
+                      x K x engine): throughput/TTFT/rejection, gated on
+                      bit-exactness vs solo references and on draining
+                      without admission deadlock (``BENCH_scheduler.json``)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -56,6 +60,7 @@ SECTIONS = (
     "serving_latency",
     "compiler",
     "kernels",
+    "scheduler",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -130,6 +135,7 @@ def main(argv: list[str] | None = None) -> int:
         paper_energy,
         paper_latency,
         roofline,
+        scheduler,
         serving_groups,
         serving_latency,
     )
@@ -173,6 +179,9 @@ def main(argv: list[str] | None = None) -> int:
     if "kernels" in wanted:
         k_rc, payload = kernels_fused.run(smoke=args.smoke)
         rc |= record("kernels", k_rc, payload)
+    if "scheduler" in wanted:
+        sc_rc, payload = scheduler.run(smoke=args.smoke)
+        rc |= record("scheduler", sc_rc, payload)
 
     if args.out:
         doc = {"smoke": args.smoke, "rc": rc, "sections": results}

@@ -51,20 +51,20 @@ def measured_sweep(targets, *, max_batch, n_requests, prompt_len, gen):
         t0 = time.perf_counter()
         done = se.run_to_completion()
         wall = time.perf_counter() - t0
-        s = se.stats
+        s = se.stats()
         rows.append({
             "engine": target.engine,
             "k": se.group_k,
-            "ticks": s["ticks"],
-            "decoded": s["decoded"],
-            "mmm_groups": s["mmm_groups"],
+            "ticks": s.ticks,
+            "decoded": s.decoded,
+            "mmm_groups": s.mmm_groups,
             # a measured MMM reduction only exists when a registry
             # backend executed (reference serves plain jnp: no calls)
             "reduction": (
-                s["decoded"] / s["mmm_groups"] if s["mmm_groups"] else None
+                s.decoded / s.mmm_groups if s.mmm_groups else None
             ),
-            "pad_lanes": s["pad_lanes"],
-            "tok_s": s["decoded"] / max(wall, 1e-9),
+            "pad_lanes": s.pad_lanes,
+            "tok_s": s.decoded / max(wall, 1e-9),
             "gen": {r.rid: tuple(r.generated) for r in done},
         })
     return rows

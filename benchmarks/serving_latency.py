@@ -93,9 +93,8 @@ def _slot_gens(se):
     """Per-slot generated-token streams (same admission order across a
     pair, so equal dicts == bit-identical decode)."""
     return {
-        slot: tuple(r.generated)
-        for slot, r in enumerate(se.slot_req)
-        if r is not None
+        slot: tuple(st.generated)
+        for slot, st in sorted(se.scheduler.running.items())
     }
 
 
@@ -124,8 +123,9 @@ def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
             (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
         ]
         row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
-        row["programmed"] = pair["prepared"].stats["programmed"]
-        row["program_ms"] = pair["prepared"].stats["program_s"] * 1e3
+        prepared_stats = pair["prepared"].stats()
+        row["programmed"] = prepared_stats.programmed
+        row["program_ms"] = prepared_stats.program_s * 1e3
         gens = {label: _slot_gens(se) for label, se in pair.items()}
         row["speedup"] = row["tick_ms_raw"] / max(row["tick_ms_prepared"], 1e-9)
         row["exact"] = gens["prepared"] == gens["raw"] and bool(gens["prepared"])

@@ -29,18 +29,29 @@ Module map:
   :class:`CompiledModel`, :class:`TargetPrice`, :func:`resolve_engine`.
 * :mod:`repro.compiler.cli`      — the shared ``--engine`` /
   ``--group-size`` / ``--mapping-policy`` / ``--tile-budget`` argparse
-  surface (:func:`add_target_args` / :func:`target_from_args`).
+  surface (:func:`add_target_args` / :func:`target_from_args`) plus the
+  serve-time scheduler flags (:func:`add_scheduler_args` /
+  :func:`scheduler_from_args`).
 
-Consumers: ``ServingEngine`` accepts a :class:`CompiledModel` (legacy
-kwargs are a deprecation shim that builds a target),
+Consumers: ``ServingEngine`` accepts ONLY a :class:`CompiledModel`
+(the PR 5 legacy-kwarg shim was removed in PR 7 — old call sites get a
+``LegacyServingSignatureError`` naming this package),
 ``launch/serve.py`` constructs a target from its flags, the serving /
 mapping benchmarks sweep over targets, and ``benchmarks/dse.py`` grids
-policy x tile budget x K through :meth:`CompiledModel.price`. A future
-multi-device serving path is one more target field (``mesh_axis``),
-not a sixth ad-hoc knob.
+policy x tile budget x K through :meth:`CompiledModel.price`. Serve-time
+knobs (scheduling policy, admission mode, KV reserve) live on
+``repro.serving.SchedulerConfig`` and are passed to
+``CompiledModel.serve(scheduler=...)`` — compile-time and serve-time
+concerns stay on separate objects. A future multi-device serving path
+is one more target field (``mesh_axis``), not a sixth ad-hoc knob.
 """
 
-from repro.compiler.cli import add_target_args, target_from_args  # noqa: F401
+from repro.compiler.cli import (  # noqa: F401
+    add_scheduler_args,
+    add_target_args,
+    scheduler_from_args,
+    target_from_args,
+)
 from repro.compiler.pipeline import (  # noqa: F401
     CompiledModel,
     TargetPrice,

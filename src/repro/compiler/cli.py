@@ -1,4 +1,5 @@
-"""Shared argparse surface for hardware targets.
+"""Shared argparse surface for hardware targets and the request
+scheduler.
 
 ``launch/serve.py`` and the benchmark drivers used to re-declare the
 ``--engine`` / ``--group-size`` / ``--mapping-policy`` blocks
@@ -6,12 +7,17 @@ independently (and in different orders); this module is the one place
 the target flags are spelled. ``add_target_args(parser)`` installs
 them, ``target_from_args(args)`` builds the
 :class:`~repro.compiler.target.HardwareTarget` the rest of the stack
-consumes::
+consumes; ``add_scheduler_args`` / ``scheduler_from_args`` do the same
+for the serve-time :class:`repro.serving.SchedulerConfig` knobs
+(scheduling policy, admission mode, KV reserve — deliberately separate
+from the compile-time target)::
 
     ap = argparse.ArgumentParser()
     add_target_args(ap)
+    add_scheduler_args(ap)
     args = ap.parse_args()
     compiled = compile(cfg, params, target_from_args(args))
+    se = compiled.serve(scheduler=scheduler_from_args(args))
 """
 
 from __future__ import annotations
@@ -72,6 +78,64 @@ def add_target_args(
         "the weight-side transforms every tick (benchmark baseline)",
     )
     return ap
+
+
+def add_scheduler_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Install the serve-time request-scheduler flags on a parser."""
+    from repro.serving.scheduler import ADMISSION_MODES, POLICIES
+
+    ap.add_argument(
+        "--sched-policy",
+        default="fifo",
+        choices=POLICIES,
+        help="waiting-queue order: fifo (priority then submission) or "
+        "deadline (earliest deadline first)",
+    )
+    ap.add_argument(
+        "--admission",
+        default="whole",
+        choices=ADMISSION_MODES,
+        help="KV-budget admission: whole commits prompt+max_new_tokens "
+        "up front; partial admits on the prompt footprint and preempts "
+        "under pressure",
+    )
+    ap.add_argument(
+        "--kv-reserve",
+        type=float,
+        default=0.0,
+        metavar="RATIO",
+        help="fraction of the KV-token budget held back from admission "
+        "(decode-growth headroom), in [0, 1]",
+    )
+    ap.add_argument(
+        "--max-waiting",
+        type=int,
+        default=None,
+        metavar="N",
+        help="waiting-queue depth cap; submissions beyond it are "
+        "rejected gracefully (default: unbounded)",
+    )
+    ap.add_argument(
+        "--no-preempt",
+        action="store_true",
+        help="disable budget/priority preemption (over-budget partial "
+        "pools stop admitting instead)",
+    )
+    return ap
+
+
+def scheduler_from_args(args: argparse.Namespace):
+    """Build (and validate) a SchedulerConfig from parsed
+    ``add_scheduler_args`` flags."""
+    from repro.serving.scheduler import SchedulerConfig
+
+    return SchedulerConfig(
+        policy=args.sched_policy,
+        admission=args.admission,
+        kv_reserve_ratio=args.kv_reserve,
+        max_waiting=args.max_waiting,
+        preempt=not getattr(args, "no_preempt", False),
+    ).validate()
 
 
 def target_from_args(args: argparse.Namespace) -> HardwareTarget:

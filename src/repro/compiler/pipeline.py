@@ -379,12 +379,18 @@ class CompiledModel:
 
         return jax.tree.map(graft, caches, pre_caches)
 
-    def serve(self, *, max_batch: int = 4, max_len: int = 256):
-        """A continuous-batching ``ServingEngine`` bound to this model."""
+    def serve(self, *, max_batch: int = 4, max_len: int = 256, scheduler=None):
+        """A scheduler-fronted continuous-batching ``ServingEngine``
+        bound to this model. ``scheduler`` is an optional
+        :class:`repro.serving.SchedulerConfig` (policy, admission mode,
+        KV reserve ratio, queue cap, preemption) — serve-time knobs,
+        deliberately NOT on the compile-time ``HardwareTarget``."""
         self._require_params()
         from repro.serving import ServingEngine  # lazy: serving imports compiler
 
-        return ServingEngine(self, max_batch=max_batch, max_len=max_len)
+        return ServingEngine(
+            self, max_batch=max_batch, max_len=max_len, scheduler=scheduler
+        )
 
     # -- pricing / reporting ------------------------------------------------
 

@@ -593,6 +593,63 @@ def plan_decode_tick(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduledTickCost:
+    """One scheduler tick under partial admission: the tick's price at
+    the ADMITTED width, plus how much of the provisioned pool it leaves
+    idle (the request scheduler admits fewer slots than the pool holds
+    whenever the KV budget or the waiting queue runs short)."""
+
+    pool: int               # provisioned serving slots (max_batch)
+    n_admitted: int         # slots the scheduler actually ran this tick
+    k: int
+    groups: int             # crossbar activations, all binary layers
+    latency_ns: float
+    energy_pj: float
+    idle_lane_fraction: float   # provisioned-lane capacity left dark
+    tokens_per_s: float         # admitted tokens / tick latency
+
+
+def scheduled_decode_tick(
+    plan, n_admitted: int, pool: int, params: CIMParams | None = None
+) -> ScheduledTickCost:
+    """Price one scheduler tick of ``n_admitted`` running slots out of a
+    ``pool``-slot engine.
+
+    Wraps :func:`plan_decode_tick` at the admitted width — a tick only
+    pays for the K-groups it actually issues — and reports the idle
+    fraction of the pool's lane capacity, so offered-load sweeps
+    (benchmarks/scheduler.py) can chart throughput *and* the dark-lane
+    cost of admission control under one price.
+    """
+    if not 0 <= n_admitted <= pool:
+        raise ValueError(
+            f"n_admitted must be in [0, pool={pool}], got {n_admitted}"
+        )
+    params = params or params_for_spec(plan.spec)
+    if n_admitted == 0:
+        return ScheduledTickCost(
+            pool=pool, n_admitted=0, k=params.k, groups=0,
+            latency_ns=0.0, energy_pj=0.0, idle_lane_fraction=1.0,
+            tokens_per_s=0.0,
+        )
+    tick = plan_decode_tick(plan, n_admitted, params=params)
+    # dark fraction of the provisioned pool, not a groups ratio: with
+    # K >= pool one K-group covers every admitted width and a
+    # groups-quantized metric would read 0% idle at n_admitted == 1
+    idle = 1.0 - n_admitted / pool
+    return ScheduledTickCost(
+        pool=pool,
+        n_admitted=n_admitted,
+        k=tick.k,
+        groups=tick.groups,
+        latency_ns=tick.latency_ns,
+        energy_pj=tick.energy_pj,
+        idle_lane_fraction=idle,
+        tokens_per_s=n_admitted / max(tick.latency_ns * 1e-9, 1e-18),
+    )
+
+
 # ---------------------------------------------------------------------------
 # GPU model
 # ---------------------------------------------------------------------------

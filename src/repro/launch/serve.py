@@ -8,6 +8,11 @@ a fixed-capacity KV/SSM cache.
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --engine packed
 
+    # the scheduler-fronted request path: 12 staggered requests through
+    # admission control + deadline policy, reported as typed stats:
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --requests 12 --sched-policy deadline --kv-reserve 0.1
+
 Uses the same decode_step the dry-run lowers for the ``decode_*``
 cells, so serving on the production mesh is the identical program.
 
@@ -46,6 +51,61 @@ import dataclasses
 import time
 
 
+def _serve_requests(compiled, args) -> int:
+    """The scheduler-fronted path: N requests with staggered prompt
+    lengths through ``submit``/``drain``, reported as typed stats."""
+    import numpy as np
+
+    from repro import compiler as compiler_lib
+    from repro.data import lm_batch
+    from repro.serving import Request
+
+    max_len = args.prompt_len + args.gen
+    se = compiled.serve(
+        max_batch=args.batch,
+        max_len=max_len,
+        scheduler=compiler_lib.scheduler_from_args(args),
+    )
+    tokens = lm_batch(compiled.cfg, args.requests, args.prompt_len,
+                      seed=args.seed)["tokens"]
+    rng = np.random.default_rng(args.seed)
+    states = []
+    t0 = time.time()
+    for i in range(args.requests):
+        # staggered prompt lengths: the scheduler's budget math and
+        # K-group planner see a ragged, realistic mix
+        plen = int(rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1))
+        states.append(se.submit(Request(
+            rid=i,
+            prompt=np.asarray(tokens[i, :plen], np.int32),
+            max_new_tokens=args.gen,
+        )))
+    se.drain()
+    wall = time.time() - t0
+
+    st = se.stats()
+    sch = st.scheduler
+    toks = sum(len(s.generated) for s in states)
+    print(f"[serve] scheduler: policy={sch.policy} admission={sch.admission} "
+          f"K={se.group_k} pool={args.batch}x{max_len} "
+          f"(kv budget {sch.kv_budget}, usable {sch.kv_usable})")
+    print(f"[serve] drained {args.requests} request(s) in {wall*1e3:.1f} ms "
+          f"({toks / max(wall, 1e-9):.1f} tok/s): finished={sch.finished} "
+          f"rejected={sch.rejected} expired={sch.expired} "
+          f"preempted={sch.preempted} resumed={sch.resumed}")
+    print(f"[serve] ticks={st.ticks} decoded={st.decoded} "
+          f"mmm_groups={st.mmm_groups} pad_lanes={st.pad_lanes} "
+          f"prefills={st.prefills} evictions={st.evictions}")
+    print(f"[serve] ttft={sch.ticks_to_first_token:.2f} ticks, "
+          f"admission wait={sch.admission_wait_ticks:.2f} ticks, "
+          f"max queue depth={sch.max_queue_depth}")
+    done = [s for s in states if s.done]
+    if done:
+        head = done[0]
+        print(f"[serve] rid={head.rid} generated[:8] = {head.generated[:8]}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     from repro import compiler as compiler_lib
 
@@ -56,8 +116,19 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=0,
+        metavar="N",
+        help="drive the request scheduler with N independent requests "
+        "(staggered prompt lengths, admission control, typed stats) "
+        "instead of the lockstep batch loop",
+    )
     # the shared hardware-target surface (engine / K / mapping / prepare)
     compiler_lib.add_target_args(ap)
+    # the serve-time scheduler surface (policy / admission / KV reserve)
+    compiler_lib.add_scheduler_args(ap)
     args = ap.parse_args(argv)
     try:
         target = compiler_lib.target_from_args(args)
@@ -129,6 +200,13 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"[serve] programmed {compiled.programmed} binarized "
                       f"projection instance(s) into {target.engine} resident "
                       f"form ({compiled.program_s * 1e3:.1f} ms, one-time PCM write)")
+    if args.requests:
+        # scheduler-fronted request path: N independent requests with
+        # staggered prompt lengths through submit/drain + typed stats
+        if cfg.is_encdec:
+            ap.error("--requests drives the decoder-only scheduler path")
+        return _serve_requests(compiled, args)
+
     batch = lm_batch(cfg, args.batch, args.prompt_len, seed=args.seed)
     tokens = batch["tokens"]
 

@@ -1,4 +1,41 @@
-"""Batched serving engine (continuous batching over a slot cache,
-decode ticks grouped into WDM-style K-groups)."""
+"""Batched serving: a request scheduler (admission control, KV budget,
+SLOs, preemption) in front of a slot-pool engine whose decode ticks are
+grouped into WDM-style K-groups."""
 
-from repro.serving.engine import BatchPlanner, GroupPlan, Request, ServingEngine
+from repro.serving.engine import (
+    BatchPlanner,
+    GroupPlan,
+    LegacyServingSignatureError,
+    ServingEngine,
+    ServingStats,
+)
+from repro.serving.scheduler import (
+    Request,
+    RequestRejectedError,
+    RequestScheduler,
+    RequestState,
+    RequestStatus,
+    SchedulerConfig,
+    SchedulerConfigError,
+    SchedulerExhaustedError,
+    SchedulerStats,
+    SlotSnapshot,
+)
+
+__all__ = [
+    "BatchPlanner",
+    "GroupPlan",
+    "LegacyServingSignatureError",
+    "Request",
+    "RequestRejectedError",
+    "RequestScheduler",
+    "RequestState",
+    "RequestStatus",
+    "SchedulerConfig",
+    "SchedulerConfigError",
+    "SchedulerExhaustedError",
+    "SchedulerStats",
+    "ServingEngine",
+    "ServingStats",
+    "SlotSnapshot",
+]

@@ -1,13 +1,37 @@
-"""Continuous-batching serving engine with WDM-style K-group decode.
+"""Scheduler-fronted continuous-batching serving engine.
 
 The paper's accelerator streams independent inference requests through
 resident weights (WDM multiplexes K of them onto one crossbar pass);
-the LM serving analogue is continuous batching: a fixed pool of
-KV-cache slots that requests join and leave independently, with the
-active slots grouped into K-groups so ONE ``Engine.binary_mmm``
-registry call serves a whole tick.
+the LM serving analogue is continuous batching behind admission
+control. The serving stack is two layers:
 
-Design:
+* :class:`ServingEngine` (this module) is the **slot pool executor**: a
+  fixed pool of KV-cache slots over a
+  :class:`repro.compiler.CompiledModel`, with K-group batched decode.
+  It owns the caches, the jitted prefill/decode dispatches, and the
+  per-slot state — and exposes the small pool surface the scheduler
+  drives (``acquire_slot`` / ``prefill_into`` / ``decode_tick`` /
+  ``evict_slot`` / ``restore_slot`` / ``release_slot``).
+* :class:`repro.serving.scheduler.RequestScheduler` is the **request
+  path** in front of it: waiting/running queues, FIFO + deadline
+  policies, a KV-token budget with a reserve ratio, per-request SLOs
+  (priority, ``deadline_ticks``) with graceful rejection, preemption
+  back to waiting, and streaming token callbacks. Every client call on
+  the engine — ``submit`` / ``step`` / ``drain`` / ``stream`` —
+  delegates to its scheduler; ``run_to_completion`` survives as a thin
+  wrapper over ``drain``.
+
+The documented loop::
+
+    compiled = repro.compiler.compile(cfg, params, target)
+    se = compiled.serve(max_batch=8, max_len=256,
+                        scheduler=SchedulerConfig(policy="deadline"))
+    states = [se.submit(Request(rid=i, prompt=p, max_new_tokens=32))
+              for i, p in enumerate(prompts)]
+    se.drain()                      # or: se.step() per tick
+    print(se.stats())               # one frozen ServingStats snapshot
+
+Executor design (unchanged across the scheduler redesign):
 
 * **Slot cache**: caches allocated once at (max_batch, max_len);
   requests claim a free slot, prefill writes their prompt KV into it,
@@ -21,39 +45,36 @@ Design:
   projections execute through a :class:`~repro.core.engine.GroupedEngine`
   — the whole tick's stacked activations go down as ONE
   ``binary_mmm(groups, w)`` call instead of one ``binary_vmm`` per
-  slot. K is capability-aware: a compiled ``repro.mapping`` plan passed
-  as ``mapping_plan=`` contributes its ``preferred_group_size()`` (the
-  placed tile technology's WDM capacity) first; else ``native_mmm``
-  backends (``wdm``) contribute their wavelength count via
-  ``preferred_group_size()``; every other backend gets one vmap'd group
-  spanning the pool. Ragged
-  tails (active % K != 0) pad the last group by repeating a real slot
-  (an idle comb line); pad lanes are computed and discarded.
-* **Crossbar programming phase** (PR 4, moved into ``compile()`` PR 5):
-  every binarized projection is compiled into the engine's resident
-  form ONCE by the compiler pipeline (``lm.program_weights`` — mapped
-  complement tiles, packed int32 words, gathered block stacks ...), so
-  decode ticks trace zero weight-side transforms and stream only
-  activations — the paper's Computation-In-Memory premise. The phase is
-  counted in ``stats`` (``programmed`` instances, ``program_s`` wall
-  time); a target with ``prepare_weights=False`` restores the per-tick
-  re-programming path (the prepared-vs-raw benchmark baseline).
-* **One-call construction** (PR 5): the engine/spec/plan/K/prepare
-  knobs live in a :class:`repro.compiler.HardwareTarget`;
-  ``compile(cfg, params, target).serve(max_batch=..., max_len=...)``
-  replaces the old five-kwarg constructor (which survives as a
-  deprecation shim routed through the same pipeline).
+  slot. K is capability-aware (mapping plan's WDM capacity > engine
+  capability > one vmap'd group); ragged tails pad the last group by
+  repeating a real slot (an idle comb line), pad lanes discarded.
+* **Crossbar programming** happened in ``compile()`` (PR 4/5): every
+  binarized projection is resident in the backend's prepared form, so
+  decode ticks trace zero weight-side transforms — the paper's
+  Computation-In-Memory premise. Counted in ``stats().programmed`` /
+  ``.program_s``.
 * **Per-slot KV-cache scatter**: gather, decode and the scatter of the
   group's cache rows back into the resident pool run as ONE fused
-  compiled dispatch per tick. Pad lanes mirror a real slot (identical
-  inputs, bit-identical updates), so the scatter is exact and free
-  slots are never touched.
+  compiled dispatch per tick; with the whole pool active the plan is
+  the identity and decode runs in place (donated caches, zero copies).
+* **Preemption snapshots**: evicting a slot copies its exact cache
+  rows + position + last token out of the pool; restoring them into
+  any free slot resumes greedy decode bit-identically — the mechanism
+  behind the scheduler's budget/priority preemption.
 * **Greedy decoding** (argmax) — sampling is orthogonal to the engine.
-* The invariant tested in tests/test_serving.py and
-  tests/test_serving_groups.py: any interleaving of submissions, any
-  group size and any execution backend produce byte-identical
-  generations to running each request alone — continuous batching and
-  K-grouping are semantically invisible.
+
+The invariant, tested in tests/test_serving.py /
+tests/test_serving_groups.py / tests/test_scheduler.py: any
+interleaving of submissions, any group size, any execution backend,
+any scheduling policy and any preemption pattern produce byte-identical
+generations to running each request alone — batching and scheduling
+are semantically invisible.
+
+The legacy multi-knob constructor
+``ServingEngine(cfg, params, engine=..., group_size=...)`` (deprecated
+in PR 5) is REMOVED: the only construction is from a
+:class:`~repro.compiler.CompiledModel`, and old call sites get a
+:class:`LegacyServingSignatureError` naming ``repro.compiler.compile``.
 
 This engine is CPU/TPU-agnostic pure JAX over the model zoo's
 prefill/decode entry points (decoder-only archs incl. SSM/hybrid).
@@ -63,7 +84,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Any
 
 import jax
@@ -71,18 +91,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm as lm_lib
+from repro.serving.scheduler import (
+    Request,
+    RequestScheduler,
+    RequestState,
+    SchedulerConfig,
+    SchedulerStats,
+    SlotSnapshot,
+)
 
 Array = jax.Array
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (prompt_len,) int32
-    max_new_tokens: int
-    # filled by the engine:
-    generated: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class LegacyServingSignatureError(TypeError):
+    """The pre-compiler ``ServingEngine(cfg, params, engine=...)``
+    signature was removed in PR 7; compile a target instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingStats:
+    """One frozen snapshot of the serving engine's counters.
+
+    Replaces the PR 3-6 ad-hoc ``stats`` dict + ``cache_stats()`` pair:
+    executor counters here, the request path nested as ``scheduler``,
+    and the bound backend's cache hit/miss counters as ``caches``.
+    """
+
+    ticks: int                  # gathered decode launches
+    decoded: int                # real slot-tokens decoded
+    mmm_groups: int             # K-groups issued to a registry backend
+    pad_lanes: int              # idle wavelengths from ragged tails
+    prefills: int
+    evictions: int              # preemption snapshots taken
+    restores: int               # snapshots grafted back into a slot
+    programmed: int             # projections made resident in compile()
+    program_s: float            # one-time programming wall time
+    scheduler: SchedulerStats
+    caches: dict[str, dict[str, int]]   # backend cache counters ({} on plain jnp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,67 +188,37 @@ class BatchPlanner:
 
 
 class ServingEngine:
-    """Continuous batching over a :class:`repro.compiler.CompiledModel`.
+    """Slot-pool executor + scheduler front over a
+    :class:`repro.compiler.CompiledModel`.
 
-    The one-call construction is ``compile(cfg, params, target).serve()``
-    (or equivalently ``ServingEngine(compiled_model)``): the compiler
-    pipeline has already mapped, validated and programmed the target, so
-    serving just binds the slot pool. The legacy multi-knob signature
-    ``ServingEngine(cfg, params, engine=..., group_size=...,
-    mapping_plan=..., prepare_weights=...)`` survives as a deprecation
-    shim that builds the equivalent :class:`~repro.compiler.HardwareTarget`
-    — new code should construct the target itself.
+    Construction is ``compile(cfg, params, target).serve()`` (or
+    equivalently ``ServingEngine(compiled_model)``): the compiler
+    pipeline has already mapped, validated and programmed the target,
+    so serving just binds the slot pool and its request scheduler.
     """
 
     def __init__(
         self,
-        model,
-        params: Any = None,
-        *,
+        compiled,
+        *legacy_args,
         max_batch: int = 4,
         max_len: int = 256,
-        engine: str | None = None,
-        group_size: int | None = None,
-        mapping_plan=None,
-        prepare_weights: bool = True,
+        scheduler: SchedulerConfig | None = None,
+        **legacy_kwargs,
     ):
         from repro import compiler as compiler_lib
 
-        if isinstance(model, compiler_lib.CompiledModel):
-            if (
-                params is not None
-                or engine is not None
-                or mapping_plan is not None
-                or group_size is not None
-                or prepare_weights is not True
-            ):
-                raise TypeError(
-                    "pass EITHER a CompiledModel (the target already fixed "
-                    "engine/plan/K/prepare_weights at compile time) OR "
-                    "(cfg, params) with the legacy knobs"
-                )
-            compiled = model
-        else:
-            # deprecation shim: the pre-compiler wiring, re-expressed as
-            # a HardwareTarget run through the one canonical pipeline
-            if engine is not None or group_size or mapping_plan is not None:
-                warnings.warn(
-                    "ServingEngine(cfg, params, engine=/group_size=/"
-                    "mapping_plan=) is deprecated; build a "
-                    "repro.compiler.HardwareTarget and pass "
-                    "compile(cfg, params, target) (or call its .serve())",
-                    DeprecationWarning,
-                    stacklevel=2,
-                )
-            compiled = compiler_lib.compile(
-                model,
-                params,
-                compiler_lib.HardwareTarget(
-                    engine=engine or "reference",
-                    group_size=group_size or None,
-                    prepare_weights=prepare_weights,
-                ),
-                plan=mapping_plan,
+        if legacy_args or legacy_kwargs or not isinstance(
+            compiled, compiler_lib.CompiledModel
+        ):
+            bad = sorted(legacy_kwargs) or ["positional params"]
+            raise LegacyServingSignatureError(
+                "the legacy ServingEngine(cfg, params, engine=/group_size=/"
+                "mapping_plan=/prepare_weights=) signature was removed "
+                f"(got: {', '.join(bad)}); build a repro.compiler."
+                "HardwareTarget and pass repro.compiler.compile(cfg, "
+                "params, target) — or call its .serve(max_batch=..., "
+                "max_len=..., scheduler=SchedulerConfig(...))"
             )
         self.compiled = compiled
         cfg = compiled.cfg
@@ -220,26 +235,15 @@ class ServingEngine:
         self.group_k = compiled.group_size_for(max_batch)
         self.planner = BatchPlanner(self.group_k)
         self._exec = compiled.executor(max_batch)
-        self.stats = {
-            "ticks": 0,           # gathered decode launches
-            "decoded": 0,         # real slot-tokens decoded (slot-at-a-time steps)
-            "mmm_groups": 0,      # K-groups issued to a registry backend
-                                  # (crossbar MMM steps/projection; 0 when
-                                  # the plain-jnp path executes instead)
-            "pad_lanes": 0,       # idle wavelengths from ragged tails
-            "prefills": 0,
-            # crossbar programming happened in compile(): every
-            # binarized projection is resident in the backend's prepared
-            # form, so decode ticks trace zero weight-side transforms
-            "programmed": compiled.programmed,
-            "program_s": compiled.program_s,
+        self._counts = {
+            "ticks": 0, "decoded": 0, "mmm_groups": 0, "pad_lanes": 0,
+            "prefills": 0, "evictions": 0, "restores": 0,
         }
 
         self.caches = lm_lib.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)        # next write position
         self.tok = np.zeros((max_batch,), np.int32)        # last emitted token
-        self.slot_req: list[Request | None] = [None] * max_batch
-        self.queue: list[Request] = []
+        self._free = set(range(max_batch))
 
         self._prefill = jax.jit(
             lambda p, t: lm_lib.prefill(p, t, cfg, engine=self._exec)
@@ -265,8 +269,8 @@ class ServingEngine:
 
         # the cache pytree (argnum 3 in both decode entry points) is
         # DONATED: tick N's caches update in place instead of being
-        # copied. `step()` immediately rebinds `self.caches` to the
-        # returned pytree, so the consumed input is never reused.
+        # copied. `decode_tick()` immediately rebinds `self.caches` to
+        # the returned pytree, so the consumed input is never reused.
         self._decode = jax.jit(gathered_decode, donate_argnums=(3,))
         # identity-plan fast path: with the whole pool active and no pad
         # lanes the gather/scatter is the identity — skip the two
@@ -278,61 +282,123 @@ class ServingEngine:
             donate_argnums=(3,),
         )
 
-    # -- client API ---------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.scheduler = RequestScheduler(self, scheduler)
+
+    # -- client API (delegates to the request scheduler) ---------------------
+
+    def submit(self, request: Request) -> RequestState:
+        """Enqueue a request; returns its (possibly REJECTED) state."""
+        return self.scheduler.submit(request)
+
+    def step(self) -> list[RequestState]:
+        """One scheduling tick: expire/admit/preempt, then one K-grouped
+        decode over the active slots; returns newly terminal states."""
+        return self.scheduler.step()
+
+    def drain(self, max_ticks: int = 10_000) -> list[RequestState]:
+        """Step until idle; raises ``SchedulerExhaustedError`` (with
+        queue-depth and budget context) on tick exhaustion."""
+        return self.scheduler.drain(max_ticks)
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[RequestState]:
+        """Thin wrapper over :meth:`drain` (the historical name)."""
+        return self.drain(max_ticks)
+
+    def stream(self, request: Request):
+        """Submit and iterate the request's tokens as they decode."""
+        return self.scheduler.stream(request)
 
     def idle(self) -> bool:
-        return not self.queue and all(r is None for r in self.slot_req)
+        return self.scheduler.idle()
 
-    def cache_stats(self) -> dict[str, dict[str, int]]:
-        """Hit/miss counters from the bound engine's caches (weight
-        cache, tiled placement caches); ``{}`` on the plain-jnp path."""
-        if self._exec is None or not hasattr(self._exec, "cache_stats"):
-            return {}
-        return self._exec.cache_stats()
+    def stats(self) -> ServingStats:
+        """One frozen snapshot: executor counters + nested scheduler
+        stats + the bound backend's cache hit/miss counters."""
+        backend = (
+            self._exec.cache_stats()
+            if self._exec is not None and hasattr(self._exec, "cache_stats")
+            else {}
+        )
+        return ServingStats(
+            **self._counts,
+            programmed=self.compiled.programmed,
+            program_s=self.compiled.program_s,
+            scheduler=self.scheduler.stats(),
+            caches=backend,
+        )
 
-    # -- internals ------------------------------------------------------------
-    def _graft(self, slot: int, pre_caches: Any, prompt_len: int) -> None:
-        """Write one request's prompt KV/states into its slot."""
+    # -- slot-pool surface (driven by RequestScheduler) ----------------------
 
-        def one(dst, src):
-            if dst.ndim == 5 and src.ndim == 5 and dst.shape[2] >= src.shape[2]:
-                # attn KV (L, B, T, KV, D): batch row `slot`, first T rows
-                return dst.at[:, slot, : src.shape[2]].set(src[:, 0].astype(dst.dtype))
-            # SSM conv/state (L, B, ...): replace the whole row
-            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+    @property
+    def n_slots(self) -> int:
+        return self.max_batch
 
-        self.caches = jax.tree.map(one, self.caches, pre_caches)
+    @property
+    def slot_capacity(self) -> int:
+        """KV rows one slot holds — the scheduler's budget unit."""
+        return self.max_len
 
-    def _admit(self) -> None:
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, pre = self._prefill(self.params, prompt)
-            self._graft(slot, pre, prompt.shape[1])
-            first = int(jnp.argmax(logits[0]))
-            req.generated.append(first)
-            self.slot_req[slot] = req
-            self.pos[slot] = len(req.prompt)
-            self.tok[slot] = first
-            self.stats["prefills"] += 1
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
 
-    def step(self) -> list[Request]:
-        """Admit queued requests, run one K-grouped decode tick over the
-        active slots; returns requests that finished this tick."""
-        self._admit()
-        active = [s for s in range(self.max_batch) if self.slot_req[s] is not None]
-        plan = self.planner.plan(active)
+    def acquire_slot(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot (scheduler admitted past the pool)")
+        slot = min(self._free)
+        self._free.remove(slot)
+        return slot
+
+    def release_slot(self, slot: int) -> None:
+        self.pos[slot] = 0
+        self.tok[slot] = 0
+        self._free.add(slot)
+
+    def prefill_into(self, slot: int, st: RequestState) -> None:
+        """Run the request's prompt prefill and graft its KV into the
+        slot; emits the first (argmax) token onto the state."""
+        prompt = jnp.asarray(st.request.prompt, jnp.int32)[None, :]
+        logits, pre = self._prefill(self.params, prompt)
+        self._graft(slot, pre, prompt.shape[1])
+        st.emit(int(jnp.argmax(logits[0])))
+        self.pos[slot] = st.request.prompt_len
+        self.tok[slot] = st.generated[-1]
+        self._counts["prefills"] += 1
+
+    def slot_exhausted(self, slot: int) -> bool:
+        """True when the next decode write would run off the slot."""
+        return self.pos[slot] + 1 >= self.max_len
+
+    def evict_slot(self, slot: int) -> SlotSnapshot:
+        """Copy the slot's exact execution state out of the pool (the
+        rows are materialized as NEW arrays, so later donated decode
+        ticks cannot alias them) and free the slot."""
+        rows = jax.tree.map(lambda c: jnp.array(c[:, slot]), self.caches)
+        snap = SlotSnapshot(pos=int(self.pos[slot]), tok=int(self.tok[slot]), rows=rows)
+        self.release_slot(slot)
+        self._counts["evictions"] += 1
+        return snap
+
+    def restore_slot(self, slot: int, snap: SlotSnapshot) -> None:
+        """Graft a preemption snapshot into a (possibly different) free
+        slot. The full row is restored — including the stale region
+        beyond ``pos``, which attention masks exactly as it does for a
+        reused slot — so resumed decode is bit-identical."""
+        self.caches = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(src.astype(dst.dtype)),
+            self.caches,
+            snap.rows,
+        )
+        self.pos[slot] = snap.pos
+        self.tok[slot] = snap.tok
+        self._counts["restores"] += 1
+
+    def decode_tick(self, running: dict[int, RequestState]) -> None:
+        """One K-grouped decode over the running slots: plan, one fused
+        gather/decode/scatter dispatch, then emit each slot's token."""
+        plan = self.planner.plan(list(running))
         if plan is None:
-            return []
-
-        # one fused dispatch: gather the plan's lanes (active slots +
-        # ragged-tail repeats), decode, scatter the KV rows back; with
-        # the whole pool active the plan is the identity and the decode
-        # runs in place
+            return
         if plan.n_active == self.max_batch and plan.n_pad == 0:
             logits, self.caches = self._decode_full(
                 self.params, jnp.asarray(self.tok), jnp.asarray(self.pos), self.caches
@@ -346,54 +412,32 @@ class ServingEngine:
                 jnp.asarray(plan.gather_indices()),
             )
         n = plan.n_active
-        self.stats["ticks"] += 1
-        self.stats["decoded"] += plan.n_active
+        self._counts["ticks"] += 1
+        self._counts["decoded"] += n
         # K-groups actually issued to a registry backend; the plain-jnp
         # path (no engine) executes no binary_mmm, so its reduction is
         # not reported as a measurement
         if self._exec is not None:
-            self.stats["mmm_groups"] += plan.n_groups
-        self.stats["pad_lanes"] += plan.n_pad
+            self._counts["mmm_groups"] += plan.n_groups
+        self._counts["pad_lanes"] += plan.n_pad
 
         nxt = np.asarray(jnp.argmax(logits[:n], axis=-1), np.int32)
-        finished = []
         for lane, slot in enumerate(plan.slots):
-            req = self.slot_req[slot]
-            req.generated.append(int(nxt[lane]))
+            st = running[slot]
+            st.emit(int(nxt[lane]))
             self.pos[slot] += 1
             self.tok[slot] = nxt[lane]
-            out_of_budget = len(req.generated) >= req.max_new_tokens
-            out_of_cache = self.pos[slot] + 1 >= self.max_len
-            if out_of_budget or out_of_cache:
-                req.done = True
-                finished.append(req)
-                self.slot_req[slot] = None   # slot immediately reusable
-                self.pos[slot] = 0
-                self.tok[slot] = 0
-        return finished
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
-        """Drain queue + slots; raises on ``max_ticks`` exhaustion.
+    # -- internals ------------------------------------------------------------
 
-        The idle check runs *after* each tick (a tick both admits and
-        decodes), so requests submitted after a previous drain — or
-        mid-run between ticks — are picked up rather than spinning; and
-        exhaustion raises with the stuck requests named instead of
-        silently returning partial results.
-        """
-        out = []
-        for _ in range(max_ticks):
-            if self.idle():
-                return out
-            out += self.step()
-            if self.idle():
-                return out
-        stuck = [r.rid for r in self.queue] + [
-            r.rid for r in self.slot_req if r is not None
-        ]
-        raise RuntimeError(
-            f"serving engine did not drain after {max_ticks} ticks; "
-            f"undrained request ids: {stuck} "
-            f"(queued={len(self.queue)}, active="
-            f"{sum(r is not None for r in self.slot_req)})"
-        )
+    def _graft(self, slot: int, pre_caches: Any, prompt_len: int) -> None:
+        """Write one request's prompt KV/states into its slot."""
+
+        def one(dst, src):
+            if dst.ndim == 5 and src.ndim == 5 and dst.shape[2] >= src.shape[2]:
+                # attn KV (L, B, T, KV, D): batch row `slot`, first T rows
+                return dst.at[:, slot, : src.shape[2]].set(src[:, 0].astype(dst.dtype))
+            # SSM conv/state (L, B, ...): replace the whole row
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+        self.caches = jax.tree.map(one, self.caches, pre_caches)

@@ -11,15 +11,15 @@ Three contracts:
   compile time (plan+engine mismatch, spec mismatch, K over plan
   capacity) instead of silently dropping knobs the way the old
   ``ServingEngine(mapping_plan=..., engine="wdm")`` did.
-* **Deprecation shim** — the legacy multi-knob ``ServingEngine``
-  signature builds the equivalent target and serves identically.
+* **One front door** — ``ServingEngine`` accepts ONLY a
+  ``CompiledModel``; the removed legacy multi-knob signature raises a
+  named ``LegacyServingSignatureError`` pointing at ``compile()``.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,12 @@ from repro.core import engine as engine_lib
 from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
 from repro.mapping import compile_plan
 from repro.models import lm as lm_lib
-from repro.serving import Request, ServingEngine
+from repro.serving import (
+    LegacyServingSignatureError,
+    Request,
+    ServingEngine,
+    ServingStats,
+)
 
 ENGINES = tuple(engine_lib.list_engines())
 
@@ -414,40 +419,37 @@ class TestPricing:
 
 
 # ---------------------------------------------------------------------------
-# ServingEngine: CompiledModel front door + deprecation shim
+# ServingEngine: CompiledModel is the ONLY front door (PR 5 shim removed)
 # ---------------------------------------------------------------------------
 
 
-class TestServingShim:
-    def test_shim_equals_compiled(self, model):
-        cfg, params, prompts = model
-        with pytest.warns(DeprecationWarning, match="HardwareTarget"):
-            legacy = _serve_gens(
-                ServingEngine(cfg, params, max_batch=2, max_len=24,
-                              engine="wdm", group_size=2),
-                prompts,
-            )
-        new = _serve_gens(
-            compiler_lib.compile(
-                cfg, params, HardwareTarget(engine="wdm", group_size=2)
-            ).serve(max_batch=2, max_len=24),
-            prompts,
-        )
-        assert legacy == new
-
-    def test_plain_construction_does_not_warn(self, model):
+class TestServingFrontDoor:
+    def test_legacy_signature_raises_named_error(self, model):
+        """The PR 5 deprecation shim is gone: every legacy spelling gets
+        one named error that points at compile()."""
         cfg, params, _ = model
-        with warnings.catch_warnings():
-            warnings.simplefilter("error", DeprecationWarning)
-            se = ServingEngine(cfg, params, max_batch=2, max_len=16)
-        assert se.group_k == 2 and se._exec is None
+        for kwargs in (
+            {},                                        # (cfg, params) positional
+            {"engine": "wdm"},
+            {"engine": "wdm", "group_size": 2},
+            {"mapping_plan": object()},
+            {"prepare_weights": False},
+        ):
+            with pytest.raises(LegacyServingSignatureError, match="compile"):
+                ServingEngine(cfg, params, max_batch=2, max_len=16, **kwargs)
+
+    def test_legacy_error_is_a_type_error(self, model):
+        # old call sites catching TypeError keep working
+        cfg, params, _ = model
+        with pytest.raises(TypeError):
+            ServingEngine(cfg, params)
 
     def test_compiled_plus_legacy_kwargs_rejected(self, model):
         cfg, params, _ = model
         cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
-        with pytest.raises(TypeError, match="EITHER"):
+        with pytest.raises(LegacyServingSignatureError):
             ServingEngine(cm, params, max_batch=2)
-        with pytest.raises(TypeError, match="EITHER"):
+        with pytest.raises(LegacyServingSignatureError, match="engine"):
             ServingEngine(cm, engine="wdm", max_batch=2)
 
     def test_serving_engine_exposes_compiled(self, model):
@@ -455,18 +457,24 @@ class TestServingShim:
         cm = compiler_lib.compile(cfg, params, HardwareTarget(engine="wdm"))
         se = ServingEngine(cm, max_batch=2, max_len=16)
         assert se.compiled is cm
-        assert se.stats["programmed"] == cm.programmed
+        stats = se.stats()
+        assert isinstance(stats, ServingStats)
+        assert stats.programmed == cm.programmed
         assert se.cfg.bnn_engine == "wdm" and se.cfg.quant == "bnn"
 
-    def test_shim_invalid_combo_raises_named_error(self, model):
-        """The silent mapping_plan drop is gone even via the shim."""
-        cfg, params, _ = model
-        plan = compile_plan(cfg, policy="greedy")
-        with pytest.raises(PlanEngineMismatchError):
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", DeprecationWarning)
-                ServingEngine(cfg, params, max_batch=2, max_len=16,
-                              engine="wdm", mapping_plan=plan)
+    def test_stats_snapshot_is_frozen(self, model):
+        cfg, params, prompts = model
+        se = compiler_lib.compile(
+            cfg, params, HardwareTarget(engine="wdm")
+        ).serve(max_batch=2, max_len=24)
+        before = se.stats()
+        _serve_gens(se, prompts)
+        after = se.stats()
+        # snapshots are immutable and independent
+        assert before.ticks == 0 and after.ticks > 0
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            after.ticks = 0
+        assert after.scheduler.finished == len(prompts)
 
 
 # ---------------------------------------------------------------------------

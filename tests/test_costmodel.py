@@ -153,3 +153,48 @@ class TestPlacement:
         assert total == pytest.approx(
             cm.network_latency_s(cm.EINSTEINBARRIER, net) * 1e9 * cm.EINSTEINBARRIER.batch
         )
+
+
+class TestScheduledTick:
+    """scheduled_decode_tick: tick pricing under partial admission."""
+
+    @pytest.fixture(scope="class")
+    def plan(self):
+        from repro.configs import get_smoke_config
+        from repro.mapping import compile_plan
+
+        cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"),
+                                  quant="bnn")
+        return compile_plan(cfg, spec=cm.OPCM_TILE, policy="tacitmap")
+
+    def test_zero_admitted_is_free_and_fully_idle(self, plan):
+        t = cm.scheduled_decode_tick(plan, 0, 8)
+        assert t.groups == 0
+        assert t.latency_ns == 0.0
+        assert t.energy_pj == 0.0
+        assert t.idle_lane_fraction == 1.0
+        assert t.tokens_per_s == 0.0
+
+    def test_bounds_checked(self, plan):
+        with pytest.raises(ValueError, match=r"n_admitted"):
+            cm.scheduled_decode_tick(plan, 9, 8)
+        with pytest.raises(ValueError, match=r"n_admitted"):
+            cm.scheduled_decode_tick(plan, -1, 8)
+
+    def test_matches_plan_tick_at_admitted_width(self, plan):
+        # a tick only pays for the K-groups it actually issues
+        for n in (1, 3, 8):
+            t = cm.scheduled_decode_tick(plan, n, 8)
+            base = cm.plan_decode_tick(plan, n)
+            assert t.groups == base.groups
+            assert t.latency_ns == pytest.approx(base.latency_ns)
+            assert t.energy_pj == pytest.approx(base.energy_pj)
+
+    def test_idle_fraction_is_dark_pool_share(self, plan):
+        # 1 - n/pool even when one K-group spans the whole pool
+        ticks = [cm.scheduled_decode_tick(plan, n, 8) for n in range(9)]
+        for n, t in enumerate(ticks):
+            assert t.idle_lane_fraction == pytest.approx(1.0 - n / 8)
+        # throughput at the admitted width is monotone in admission
+        tps = [t.tokens_per_s for t in ticks]
+        assert all(a <= b + 1e-9 for a, b in zip(tps, tps[1:]))

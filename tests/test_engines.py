@@ -261,9 +261,10 @@ class TestLMServingParity:
     def test_continuous_batching_packed_matches_reference(self):
         import dataclasses
 
+        from repro import compiler as compiler_lib
         from repro.configs import get_smoke_config
         from repro.models import lm as lm_lib
-        from repro.serving.engine import Request, ServingEngine
+        from repro.serving.engine import Request
 
         cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
         params = lm_lib.init_params(jax.random.key(0), cfg)
@@ -271,7 +272,9 @@ class TestLMServingParity:
         prompts = [rng.integers(1, cfg.vocab_size, (8,), dtype=np.int32) for _ in range(3)]
 
         def gen(engine_name):
-            se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine=engine_name)
+            se = compiler_lib.compile(
+                cfg, params, compiler_lib.HardwareTarget(engine=engine_name)
+            ).serve(max_batch=2, max_len=32)
             for i, p in enumerate(prompts):
                 se.submit(Request(rid=i, prompt=p, max_new_tokens=4))
             return {r.rid: r.generated for r in se.run_to_completion()}

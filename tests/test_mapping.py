@@ -285,17 +285,21 @@ class TestIntegrations:
         plan = allocate(cfg, spec=OPCM_TILE)
         import jax
 
+        from repro import compiler as compiler_lib
         from repro.models import lm as lm_lib
-        from repro.serving import ServingEngine
 
         params = lm_lib.init_params(jax.random.key(0), cfg)
-        se = ServingEngine(cfg, params, max_batch=32, max_len=16,
-                           engine="tiled", mapping_plan=plan)
+        se = compiler_lib.compile(
+            cfg, params, compiler_lib.HardwareTarget(engine="tiled"), plan=plan
+        ).serve(max_batch=32, max_len=16)
         # plan's WDM capacity (16) beats the vmap'd-pool fallback (32)
         assert se.group_k == 16
         # explicit request still wins
-        se2 = ServingEngine(cfg, params, max_batch=32, max_len=16,
-                            engine="tiled", mapping_plan=plan, group_size=4)
+        se2 = compiler_lib.compile(
+            cfg, params,
+            compiler_lib.HardwareTarget(engine="tiled", group_size=4),
+            plan=plan,
+        ).serve(max_batch=32, max_len=16)
         assert se2.group_k == 4
 
     def test_infer_engine_binds_plan_and_policy(self):

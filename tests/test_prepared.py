@@ -276,7 +276,8 @@ class TestServingProgramming:
         exactly once per projection instance at engine bind, and never
         again across N decode ticks (pass-through validation of an
         already-prepared artifact is not programming and not counted)."""
-        from repro.serving.engine import Request, ServingEngine
+        from repro import compiler as compiler_lib
+        from repro.serving.engine import Request
 
         calls = {"n": 0}
         orig = engine_lib.WDMEngine.prepare
@@ -288,28 +289,34 @@ class TestServingProgramming:
 
         monkeypatch.setattr(engine_lib.WDMEngine, "prepare", counting)
         cfg, params, prompts = _serving_fixture()
-        se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="wdm")
+        se = compiler_lib.compile(
+            cfg, params, compiler_lib.HardwareTarget(engine="wdm")
+        ).serve(max_batch=2, max_len=32)
         expected = cfg.n_repeats * self.N_PROJ
         assert calls["n"] == expected
-        assert se.stats["programmed"] == expected
-        assert se.stats["program_s"] > 0
+        stats = se.stats()
+        assert stats.programmed == expected
+        assert stats.program_s > 0
         for i, p in enumerate(prompts):
             se.submit(Request(rid=i, prompt=p, max_new_tokens=5))
         se.run_to_completion()
-        assert se.stats["ticks"] >= 5
+        assert se.stats().ticks >= 5
         assert calls["n"] == expected  # zero weight-side programming per tick
 
     @pytest.mark.parametrize("name", ["wdm", "packed", "tiled"])
     def test_generations_prepared_vs_raw_vs_reference(self, name):
-        from repro.serving.engine import Request, ServingEngine
+        from repro import compiler as compiler_lib
+        from repro.serving.engine import Request
 
         cfg, params, prompts = _serving_fixture()
 
         def gen(engine, prepared=True):
-            se = ServingEngine(
-                cfg, params, max_batch=2, max_len=32,
-                engine=engine, prepare_weights=prepared,
-            )
+            se = compiler_lib.compile(
+                cfg, params,
+                compiler_lib.HardwareTarget(
+                    engine=engine or "reference", prepare_weights=prepared
+                ),
+            ).serve(max_batch=2, max_len=32)
             for i, p in enumerate(prompts):
                 se.submit(Request(rid=i, prompt=p, max_new_tokens=4))
             return {r.rid: tuple(r.generated) for r in se.run_to_completion()}
@@ -357,7 +364,8 @@ class TestServingProgramming:
     def test_minimal_third_party_engine_served_raw(self):
         """A registered backend implementing only the pre-PR-4 protocol
         (no ``prepare``) must serve unprogrammed, not crash at bind."""
-        from repro.serving.engine import Request, ServingEngine
+        from repro import compiler as compiler_lib
+        from repro.serving.engine import Request
 
         class MinimalEngine:
             info = engine_lib.ReferenceEngine.info
@@ -380,8 +388,10 @@ class TestServingProgramming:
         engine_lib.register_engine("minimal", lambda spec=None: MinimalEngine())
         try:
             cfg, params, prompts = _serving_fixture()
-            se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="minimal")
-            assert se.stats["programmed"] == 0
+            se = compiler_lib.compile(
+                cfg, params, compiler_lib.HardwareTarget(engine="minimal")
+            ).serve(max_batch=2, max_len=32)
+            assert se.stats().programmed == 0
             se.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=3))
             done = se.run_to_completion()
             assert len(done) == 1 and len(done[0].generated) == 3
@@ -389,14 +399,18 @@ class TestServingProgramming:
             engine_lib._REGISTRY.pop("minimal", None)
 
     def test_serving_cache_stats_exposed(self):
-        from repro.serving.engine import ServingEngine
+        from repro import compiler as compiler_lib
 
         cfg, params, _ = _serving_fixture()
-        se = ServingEngine(cfg, params, max_batch=2, max_len=32, engine="tiled")
-        stats = se.cache_stats()
+        se = compiler_lib.compile(
+            cfg, params, compiler_lib.HardwareTarget(engine="tiled")
+        ).serve(max_batch=2, max_len=32)
+        stats = se.stats().caches
         assert "weight_cache" in stats and "placement_indices" in stats
-        se_ref = ServingEngine(cfg, params, max_batch=2, max_len=32)
-        assert se_ref.cache_stats() == {}
+        se_ref = compiler_lib.compile(
+            cfg, params, compiler_lib.HardwareTarget(engine="reference")
+        ).serve(max_batch=2, max_len=32)
+        assert se_ref.stats().caches == {}
 
 
 # ---------------------------------------------------------------------------

@@ -6,9 +6,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compiler as compiler_lib
 from repro.configs import get_smoke_config
 from repro.models import lm as lm_lib
-from repro.serving import Request, ServingEngine
+from repro.serving import Request
+
+
+def _compiled(cfg, params):
+    return compiler_lib.compile(
+        cfg, params, compiler_lib.HardwareTarget(engine="reference")
+    )
 
 
 def _reference_generate(cfg, params, prompt, n_new):
@@ -45,26 +52,25 @@ def test_continuous_batching_matches_isolated(arch):
     refs = [_reference_generate(cfg, params, p, n_new) for p in prompts]
 
     # 3 requests, only 2 slots: forces queueing + slot reuse
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    eng = _compiled(cfg, params).serve(max_batch=2, max_len=64)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=n_new) for i, p in enumerate(prompts)]
-    eng.submit(reqs[0])
-    eng.submit(reqs[1])
+    states = [eng.submit(reqs[0]), eng.submit(reqs[1])]
     eng.step()          # tick 1: both admitted
-    eng.submit(reqs[2])  # arrives mid-flight
+    states.append(eng.submit(reqs[2]))  # arrives mid-flight
     done = eng.run_to_completion()
 
-    assert len(done) == 3 and all(r.done for r in reqs)
-    for req, ref in zip(reqs, refs):
-        assert req.generated == ref, (
-            f"req {req.rid}: continuous batching changed the output\n"
-            f"  batched:  {req.generated}\n  isolated: {ref}"
+    assert len(done) == 3 and all(s.done for s in states)
+    for st, ref in zip(states, refs):
+        assert st.generated == ref, (
+            f"req {st.rid}: continuous batching changed the output\n"
+            f"  batched:  {st.generated}\n  isolated: {ref}"
         )
 
 
 def test_slots_free_and_reuse():
     cfg = get_smoke_config("tinyllama-1.1b")
     params = lm_lib.init_params(jax.random.key(1), cfg)
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32)
+    eng = _compiled(cfg, params).serve(max_batch=1, max_len=32)
     rng = np.random.default_rng(1)
     reqs = [Request(rid=i, prompt=rng.integers(0, 100, size=4).astype(np.int32),
                     max_new_tokens=3) for i in range(3)]

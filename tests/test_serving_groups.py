@@ -10,10 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compiler as compiler_lib
 from repro.configs import get_smoke_config
 from repro.core import engine as engine_lib
 from repro.models import lm as lm_lib
-from repro.serving import BatchPlanner, Request, ServingEngine
+from repro.serving import BatchPlanner, Request
 
 ENGINES = engine_lib.list_engines()
 
@@ -115,11 +116,18 @@ def served_model():
     return cfg, params, prompts
 
 
-def _serve(cfg, params, prompts, *, engine, group_size, max_batch=3, n_new=3):
-    se = ServingEngine(
-        cfg, params, max_batch=max_batch, max_len=24,
-        engine=engine, group_size=group_size,
+def _compiled_ref(cfg, params):
+    return compiler_lib.compile(
+        cfg, params, compiler_lib.HardwareTarget(engine="reference")
     )
+
+
+def _serve(cfg, params, prompts, *, engine, group_size, max_batch=3, n_new=3):
+    cm = compiler_lib.compile(
+        cfg, params,
+        compiler_lib.HardwareTarget(engine=engine, group_size=group_size or None),
+    )
+    se = cm.serve(max_batch=max_batch, max_len=24)
     for i, p in enumerate(prompts):
         se.submit(Request(rid=i, prompt=p, max_new_tokens=n_new))
     done = se.run_to_completion()
@@ -135,12 +143,13 @@ def test_grouped_decode_matches_slot_at_a_time(name, served_model):
     assert got_k2 == got_k1
     # grouping reduced the crossbar group count and padded ragged tails
     # (the reference engine serves plain jnp — no registry calls to count)
+    s2, s1 = se2.stats(), se1.stats()
     if name == "reference":
-        assert se2.stats["mmm_groups"] == se1.stats["mmm_groups"] == 0
+        assert s2.mmm_groups == s1.mmm_groups == 0
     else:
-        assert se2.stats["mmm_groups"] < se1.stats["mmm_groups"]
-    assert se2.stats["decoded"] == se1.stats["decoded"]
-    assert se2.stats["pad_lanes"] > 0
+        assert s2.mmm_groups < s1.mmm_groups
+    assert s2.decoded == s1.decoded
+    assert s2.pad_lanes > 0
 
 
 @pytest.mark.parametrize("name", [n for n in ENGINES if n != "reference"])
@@ -157,17 +166,22 @@ def test_single_slot_degenerate_case(served_model):
     got_k3, se = _serve(cfg, params, prompts[:1], engine="wdm", group_size=3)
     got_k1, _ = _serve(cfg, params, prompts[:1], engine="wdm", group_size=1)
     assert got_k3 == got_k1
-    assert se.stats["mmm_groups"] == se.stats["ticks"]
-    assert se.stats["pad_lanes"] == 2 * se.stats["ticks"]
+    s = se.stats()
+    assert s.mmm_groups == s.ticks
+    assert s.pad_lanes == 2 * s.ticks
 
 
 def test_group_size_auto_from_capability(served_model):
     cfg, params, _ = served_model
     # native MMM: K from the wavelength count, clamped to the pool
-    se = ServingEngine(cfg, params, max_batch=2, max_len=16, engine="wdm")
+    se = compiler_lib.compile(
+        cfg, params, compiler_lib.HardwareTarget(engine="wdm")
+    ).serve(max_batch=2, max_len=16)
     assert se.group_k == min(engine_lib.get_engine("wdm").spec.wdm_k, 2)
     # non-native: one vmap'd group spanning the pool
-    se = ServingEngine(cfg, params, max_batch=2, max_len=16, engine="packed")
+    se = compiler_lib.compile(
+        cfg, params, compiler_lib.HardwareTarget(engine="packed")
+    ).serve(max_batch=2, max_len=16)
     assert se.group_k == 2
 
 
@@ -178,16 +192,16 @@ def test_group_size_auto_from_capability(served_model):
 
 def test_exhaustion_raises_with_stuck_requests(served_model):
     cfg, params, prompts = served_model
-    se = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    se = _compiled_ref(cfg, params).serve(max_batch=1, max_len=64)
     se.submit(Request(rid=7, prompt=prompts[0], max_new_tokens=50))
-    with pytest.raises(RuntimeError, match=r"did not drain.*\[7\]"):
+    with pytest.raises(RuntimeError, match=r"did not drain.*\[7\].*queue_depth"):
         se.run_to_completion(max_ticks=2)
 
 
 def test_submit_after_idle_drains_again(served_model):
     """Requests submitted after a drain are served, not spun on."""
     cfg, params, prompts = served_model
-    se = ServingEngine(cfg, params, max_batch=2, max_len=24)
+    se = _compiled_ref(cfg, params).serve(max_batch=2, max_len=24)
     se.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=2))
     first = se.run_to_completion()
     assert [r.rid for r in first] == [0] and se.idle()
