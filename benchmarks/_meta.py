@@ -1,0 +1,53 @@
+"""Shared provenance header for benchmark artifacts.
+
+Every ``benchmarks/run.py --out`` JSON used to carry only its section
+payloads — a BENCH_*.json from three PRs ago was indistinguishable from
+today's except by file date, which breaks the whole point of keeping a
+perf *trajectory*. :func:`bench_header` is the one place the provenance
+stamp is spelled: schema version, UTC timestamp, jax/jaxlib versions,
+the active backend and the git SHA (best-effort — absent git metadata
+degrades to ``"unknown"``, never an exception inside a benchmark run).
+"""
+
+from __future__ import annotations
+
+import datetime
+import subprocess
+
+# bump when the {"smoke", "rc", "sections"} document shape changes
+BENCH_SCHEMA_VERSION = 1
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def bench_header() -> dict:
+    """The provenance stamp ``run.py`` writes at the top of every
+    ``--out`` document."""
+    import jax
+
+    try:
+        backend = jax.default_backend()
+    except Exception:  # no platform initialized (should not happen in CI)
+        backend = "unknown"
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "jaxlib_version": getattr(
+            __import__("jaxlib"), "__version__", "unknown"
+        ),
+        "backend": backend,
+        "git_sha": _git_sha(),
+    }

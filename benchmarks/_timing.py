@@ -1,0 +1,106 @@
+"""Shared interleaved paired-timing helpers for the benchmark drivers.
+
+``serving_latency``, ``kernels_fused`` and ``scheduler`` each grew a
+private copy of the same measurement loop; PR 8 hoists the methodology
+here so every section times the same way:
+
+* **Interleave the pair** (a, b, a, b, ...): the structural delta under
+  test is the per-call graph difference, and interleaving cancels
+  machine drift that sequential phases would alias into the comparison.
+  Each (a, b) pair is adjacent in time, so the per-pair difference is
+  the robust statistic — a noise spike only perturbs one pair.
+* **Warm up first**: the first calls pay compilation/admission/prefill;
+  they are excluded from every timed window.
+* **Fence the dispatch**: JAX dispatch is async — without
+  ``block_until_ready`` a "timing" measures the enqueue, not the work.
+  ``timed(fn, fence=True)`` drains the call's returned arrays before
+  stopping the clock (serving-tick timing leaves it off: the engine's
+  token-emission host sync is the natural fence, and double-fencing
+  would add a sync the served path never pays).
+* **Pool, then median**: gates aggregate the per-pair deltas across a
+  sweep's rows and take one median — ``pooled_median`` — rather than
+  averaging medians of unequal windows.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable
+
+
+def timed(fn: Callable[[], object], *, fence: bool = False) -> float:
+    """Wall seconds of one ``fn()`` call. ``fence=True`` drains the
+    returned JAX arrays with ``block_until_ready`` before stopping the
+    clock (else async dispatch makes the number an enqueue time)."""
+    t0 = time.perf_counter()
+    out = fn()
+    if fence:
+        import jax
+
+        jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+class Stopwatch:
+    """Wall-clock a block::
+
+        with Stopwatch() as sw:
+            ...work...
+        print(sw.seconds)
+    """
+
+    seconds: float | None = None
+
+    def __enter__(self) -> "Stopwatch":
+        self.seconds = None
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        return False
+
+
+def paired_times(
+    a: Callable[[], object],
+    b: Callable[[], object],
+    *,
+    reps: int,
+    warmup: int = 1,
+    fence: bool = True,
+) -> tuple[list[float], list[float]]:
+    """Interleaved (a, b) call pairs -> (a seconds, b seconds), each of
+    length ``reps``; ``warmup`` unrecorded pairs run first."""
+    for _ in range(warmup):
+        timed(a, fence=fence)
+        timed(b, fence=fence)
+    ta, tb = [], []
+    for _ in range(reps):
+        ta.append(timed(a, fence=fence))
+        tb.append(timed(b, fence=fence))
+    return ta, tb
+
+
+def interleaved_ticks(servers: dict, *, ticks: int) -> dict[str, list[float]]:
+    """One timed ``step()`` per server per round, rounds interleaved
+    across the (already warmed-up) servers — the serving-tick analogue
+    of :func:`paired_times`. Returns {label: [tick seconds]}."""
+    times: dict[str, list[float]] = {label: [] for label in servers}
+    for _ in range(ticks):
+        for label, se in servers.items():
+            times[label].append(timed(se.step))
+    return times
+
+
+def paired_deltas(
+    base: list[float], other: list[float], scale: float = 1.0
+) -> list[float]:
+    """Per-pair (other - base) differences, optionally scaled (1e3 for
+    ms, 1e6 for us). Positive = ``base`` faster."""
+    return [(o - b) * scale for b, o in zip(base, other)]
+
+
+def pooled_median(deltas: list[float]) -> float:
+    """The gate statistic: one median over all pooled per-pair deltas."""
+    return statistics.median(deltas) if deltas else 0.0

@@ -21,7 +21,8 @@ interpreter's fixed per-launch floor.
 from __future__ import annotations
 
 import statistics
-import time
+
+from benchmarks import _timing
 
 # decode-shaped operands: (rows, m) x (m, n) as served by a 512/1024
 # model — qkv (8 heads + 2 kv of head-dim 64, concatenated), o-proj,
@@ -32,25 +33,6 @@ SHAPES = (
     ("ff_in", 4, 512, 1024),
     ("ff_out", 4, 1024, 512),
 )
-
-
-def _paired_times(fused, unfused, x, *, reps):
-    """Interleaved (fused, unfused) call pairs — per-pair deltas cancel
-    machine drift, same methodology as serving_latency."""
-    import jax
-
-    jax.block_until_ready(fused(x))
-    jax.block_until_ready(unfused(x))
-    tf, tu = [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fused(x))
-        t1 = time.perf_counter()
-        jax.block_until_ready(unfused(x))
-        t2 = time.perf_counter()
-        tf.append(t1 - t0)
-        tu.append(t2 - t1)
-    return tf, tu
 
 
 def kernel_rows(*, reps):
@@ -87,15 +69,18 @@ def kernel_rows(*, reps):
         exact = bool(jnp.array_equal(ref, fused(x))) and bool(
             jnp.array_equal(ref, unfused(x))
         )
-        tf, tu = _paired_times(fused, unfused, x, reps=reps)
-        deltas = [(u - f) * 1e6 for f, u in zip(tf, tu)]
+        # interleaved fenced pairs — the shared _timing methodology
+        tf, tu = _timing.paired_times(
+            lambda: fused(x), lambda: unfused(x), reps=reps
+        )
+        deltas = _timing.paired_deltas(tf, tu, scale=1e6)
         rows.append({
             "shape": name,
             "dims": f"({b},{m})x({m},{n})",
             "fused_us": statistics.median(tf) * 1e6,
             "unfused_us": statistics.median(tu) * 1e6,
             "paired_deltas_us": deltas,
-            "paired_delta_us": statistics.median(deltas),
+            "paired_delta_us": _timing.pooled_median(deltas),
             "exact": exact,
         })
     return rows
@@ -119,10 +104,10 @@ def run(smoke: bool = False) -> tuple[int, dict]:
               f"{str(r['exact']):>6s}")
 
     kernel_deltas = [d for r in rows for d in r["paired_deltas_us"]]
-    kernel_faster = statistics.median(kernel_deltas) > 0
+    kernel_faster = _timing.pooled_median(kernel_deltas) > 0
     kernel_exact = all(r["exact"] for r in rows)
     print(f"kernel pooled median delta (unfused - fused): "
-          f"{statistics.median(kernel_deltas):+.1f}us; "
+          f"{_timing.pooled_median(kernel_deltas):+.1f}us; "
           f"strictly faster: {kernel_faster}; bit-exact vs reference: "
           f"{kernel_exact}")
 
@@ -136,10 +121,10 @@ def run(smoke: bool = False) -> tuple[int, dict]:
               f"{r['tick_ms_unfused']:11.2f} {r['paired_delta_ms']:10.3f} "
               f"{str(r['exact']):>6s}")
     tick_deltas = [d for r in tick_rows for d in r["paired_deltas_ms"]]
-    tick_faster = statistics.median(tick_deltas) > 0
+    tick_faster = _timing.pooled_median(tick_deltas) > 0
     tick_exact = all(r["exact"] for r in tick_rows)
     print(f"tick pooled median delta (unfused - fused): "
-          f"{statistics.median(tick_deltas):+.3f}ms; strictly faster: "
+          f"{_timing.pooled_median(tick_deltas):+.3f}ms; strictly faster: "
           f"{tick_faster}; decode streams bit-identical: {tick_exact}")
 
     rc = 0 if (kernel_exact and tick_exact and kernel_faster and tick_faster) else 1

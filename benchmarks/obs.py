@@ -1,0 +1,206 @@
+"""Telemetry gate — traced serving, measured-vs-modeled pricing, and
+the disabled-path overhead bound (``BENCH_obs.json``).
+
+The PR-8 observability subsystem (:mod:`repro.obs`) makes three
+promises this section holds it to, per (engine x K) on the smoke LM:
+
+* **Crosscheck sanity**: a traced serve must yield a
+  measured-vs-modeled decode-tick ratio that is finite and strictly
+  positive for every (engine, K) swept — and the expected spans
+  (compile stages, prefill, decode ticks) must actually be present in
+  the trace. The ratio's *level* is not gated (the host emulates
+  nanosecond photonics, so >>1 is expected); the artifact records it as
+  a fidelity trajectory across PRs.
+* **Bit-exactness**: generation with tracing on must be byte-identical
+  to the same serve with telemetry off — instrumentation must never
+  change tokens.
+* **Near-zero when off**: with no active session, ``obs.span()`` is one
+  ``None`` check returning a shared no-op; the microbench bounds its
+  per-call cost (generous CI bound — the gate catches accidental
+  allocation/clock/sync on the disabled path, not nanosecond drift).
+
+Also writes a sample Chrome trace (``trace.json``) so CI uploads a
+loadable artifact next to the JSON.
+
+    PYTHONPATH=src python -m benchmarks.obs [--smoke]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+# disabled-path bound: median ns per obs.span() call with telemetry off.
+# The real cost is ~100ns (one None check + returning a singleton); 20us
+# catches a reintroduced allocation/clock/host-sync without flaking CI.
+DISABLED_NS_BOUND = 20_000
+
+
+def _bench_model():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_lib
+
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(n, max_len=5):
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    return [
+        rng.integers(1, 1000, (3 + i % max_len,), dtype=np.int32)
+        for i in range(n)
+    ]
+
+
+def _serve(cm, prompts, *, gen, max_batch, max_len):
+    """One drained serve; returns ({rid: tokens}, ServingEngine)."""
+    from repro.serving import Request
+
+    se = cm.serve(max_batch=max_batch, max_len=max_len)
+    states = [
+        se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
+        for i, p in enumerate(prompts)
+    ]
+    se.drain()
+    return {st.rid: tuple(st.generated) for st in states}, se
+
+
+def traced_rows(engines, ks, *, n_requests, gen, max_batch):
+    """Per (engine, K): serve traced AND untraced, gate bit-exactness,
+    and cross-check every traced tick against the cost model."""
+    from repro import compiler as compiler_lib
+    from repro import obs
+
+    cfg, params = _bench_model()
+    prompts = _prompts(n_requests)
+    max_len = max(len(p) for p in prompts) + gen + 2
+
+    rows = []
+    sample_tracer = None
+    for engine in engines:
+        for k in ks:
+            target = compiler_lib.HardwareTarget(engine=engine, group_size=k)
+            # telemetry OFF: the reference generation
+            cm = compiler_lib.compile(cfg, params, target)
+            plain, _ = _serve(
+                cm, prompts, gen=gen, max_batch=max_batch, max_len=max_len
+            )
+            # telemetry ON: same target, full session (compile included,
+            # so the pipeline-stage spans land in the sample trace)
+            with obs.session() as tel:
+                cm = compiler_lib.compile(cfg, params, target)
+                traced, se = _serve(
+                    cm, prompts, gen=gen, max_batch=max_batch, max_len=max_len
+                )
+                checks = obs.crosscheck_serving(se, tracer=tel.tracer)
+            sample_tracer = tel.tracer
+
+            spans_present = all(
+                tel.tracer.spans(name)
+                for name in ("compile", "prefill", "decode_tick")
+            )
+            for c in checks:
+                rows.append({
+                    "engine": engine,
+                    "k": c.k,
+                    "ticks": c.ticks,
+                    "n_active_mean": c.n_active_mean,
+                    "measured_us": c.measured_ns * 1e-3,
+                    "modeled_ns": c.modeled_ns,
+                    "ratio": c.ratio,
+                    "ratio_finite": c.finite,
+                    "spans_present": spans_present,
+                    "bit_exact": traced == plain and bool(plain),
+                })
+    return rows, sample_tracer
+
+
+def disabled_overhead(reps: int) -> dict:
+    """Median ns of the no-op telemetry path (no active session)."""
+    from repro import obs
+
+    assert not obs.enabled(), "disabled-path bench needs telemetry off"
+
+    def once(n):
+        t0 = time.perf_counter_ns()
+        for _ in range(n):
+            with obs.span("tick", track="serve", engine="none", k=1):
+                pass
+        return (time.perf_counter_ns() - t0) / n
+
+    once(reps)  # warm the helper path
+    per_call = [once(reps) for _ in range(7)]
+    return {
+        "span_ns_per_call": statistics.median(per_call),
+        "bound_ns": DISABLED_NS_BOUND,
+        "within_bound": statistics.median(per_call) < DISABLED_NS_BOUND,
+    }
+
+
+def run(smoke: bool = False, trace_out: str | None = "trace.json"):
+    if smoke:
+        engines, ks = ("wdm", "tiled"), (1, 4)
+        sizes = dict(n_requests=4, gen=4, max_batch=2)
+        reps = 2_000
+    else:
+        engines, ks = ("reference", "wdm", "packed", "tiled"), (1, 2, 4)
+        sizes = dict(n_requests=6, gen=6, max_batch=4)
+        reps = 20_000
+
+    rows, sample_tracer = traced_rows(engines, ks, **sizes)
+
+    print("\n== telemetry gate: traced serving, measured-vs-modeled "
+          f"pricing (smoke LM, pool={sizes['max_batch']}) ==")
+    print(f"{'engine':>10s} {'K':>3s} {'ticks':>6s} {'measured_us':>12s} "
+          f"{'modeled_ns':>11s} {'ratio':>10s} {'finite':>7s} {'spans':>6s} "
+          f"{'exact':>6s}")
+    for r in rows:
+        print(f"{r['engine']:>10s} {r['k']:3d} {r['ticks']:6d} "
+              f"{r['measured_us']:12.1f} {r['modeled_ns']:11.1f} "
+              f"{r['ratio']:10.1f} {str(r['ratio_finite']):>7s} "
+              f"{str(r['spans_present']):>6s} {str(r['bit_exact']):>6s}")
+
+    finite = all(r["ratio_finite"] for r in rows)
+    spans = all(r["spans_present"] for r in rows)
+    exact = all(r["bit_exact"] for r in rows)
+    print(f"every measured/modeled ratio finite and > 0: {finite}")
+    print(f"compile/prefill/decode_tick spans present in every trace: {spans}")
+    print(f"tracing on vs off bit-identical generations: {exact}")
+
+    off = disabled_overhead(reps)
+    print(f"\ndisabled-path span overhead: {off['span_ns_per_call']:.0f} ns/call "
+          f"(bound {off['bound_ns']} ns) -> within bound: {off['within_bound']}")
+    print("(off-by-default contract: one None check, a shared no-op span, "
+          "no clock reads and no host synchronization)")
+
+    if trace_out and sample_tracer is not None:
+        sample_tracer.export_chrome(trace_out)
+        print(f"[obs] wrote sample Chrome trace -> {trace_out}")
+
+    rc = 0 if (finite and spans and exact and off["within_bound"]) else 1
+    payload = {
+        "crosscheck": rows,
+        "disabled_overhead": off,
+        "ratios_finite": finite,
+        "spans_present": spans,
+        "bit_exact": exact,
+    }
+    return rc, payload
+
+
+def main(smoke: bool = False) -> int:
+    return run(smoke=smoke)[0]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
+    raise SystemExit(main(smoke=ap.parse_args().smoke))

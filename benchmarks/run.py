@@ -34,6 +34,11 @@ Sections:
                       x K x engine): throughput/TTFT/rejection, gated on
                       bit-exactness vs solo references and on draining
                       without admission deadlock (``BENCH_scheduler.json``)
+ 14. obs           — telemetry gate: traced serving with measured-vs-
+                      modeled decode-tick pricing (ratio finite per
+                      engine x K), tracing-on/off bit-exactness, the
+                      disabled-path overhead bound, and a sample Chrome
+                      trace artifact (``BENCH_obs.json`` + trace.json)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -61,6 +66,7 @@ SECTIONS = (
     "compiler",
     "kernels",
     "scheduler",
+    "obs",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -139,6 +145,8 @@ def main(argv: list[str] | None = None) -> int:
         serving_groups,
         serving_latency,
     )
+    # aliased: `obs` unqualified would shadow repro.obs at call sites
+    from benchmarks import obs as obs_bench
 
     rc = 0
     results: dict[str, dict] = {}
@@ -182,9 +190,19 @@ def main(argv: list[str] | None = None) -> int:
     if "scheduler" in wanted:
         sc_rc, payload = scheduler.run(smoke=args.smoke)
         rc |= record("scheduler", sc_rc, payload)
+    if "obs" in wanted:
+        o_rc, payload = obs_bench.run(smoke=args.smoke)
+        rc |= record("obs", o_rc, payload)
 
     if args.out:
-        doc = {"smoke": args.smoke, "rc": rc, "sections": results}
+        from benchmarks._meta import bench_header
+
+        doc = {
+            "header": bench_header(),
+            "smoke": args.smoke,
+            "rc": rc,
+            "sections": results,
+        }
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2, default=str)
         print(f"\n[run] wrote section results to {args.out}")

@@ -30,7 +30,8 @@ drives a server:
 from __future__ import annotations
 
 import dataclasses
-import time
+
+from benchmarks import _timing
 
 TICK_CAP = 2_000  # deadlock gate: no smoke run needs remotely this many
 
@@ -76,25 +77,25 @@ def _offered_load(cm, prompts, refs, *, rate, sched, max_batch, max_len, gen):
     se = cm.serve(max_batch=max_batch, max_len=max_len, scheduler=sched)
     states, acc, nxt, ticks = [], 0.0, 0, 0
     deadlocked = False
-    t0 = time.perf_counter()
-    while nxt < len(prompts) or not se.idle():
-        if nxt < len(prompts):
-            acc += rate
-            while acc >= 1.0 and nxt < len(prompts):
-                states.append(se.submit(Request(
-                    rid=nxt,
-                    prompt=prompts[nxt],
-                    max_new_tokens=gen,
-                    priority=nxt % 2,     # mixed SLOs: odd rids outrank
-                )))
-                acc -= 1.0
-                nxt += 1
-        se.step()
-        ticks += 1
-        if ticks > TICK_CAP:
-            deadlocked = True
-            break
-    wall = time.perf_counter() - t0
+    with _timing.Stopwatch() as sw:
+        while nxt < len(prompts) or not se.idle():
+            if nxt < len(prompts):
+                acc += rate
+                while acc >= 1.0 and nxt < len(prompts):
+                    states.append(se.submit(Request(
+                        rid=nxt,
+                        prompt=prompts[nxt],
+                        max_new_tokens=gen,
+                        priority=nxt % 2,     # mixed SLOs: odd rids outrank
+                    )))
+                    acc -= 1.0
+                    nxt += 1
+            se.step()
+            ticks += 1
+            if ticks > TICK_CAP:
+                deadlocked = True
+                break
+    wall = sw.seconds
 
     exact = True
     for st in states:

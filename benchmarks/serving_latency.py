@@ -27,15 +27,10 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
-import time
+
+from benchmarks import _timing
 
 GATE_ENGINES = ("packed", "wdm", "tiled")
-
-
-def _timed_step(se) -> float:
-    t0 = time.perf_counter()
-    se.step()
-    return time.perf_counter() - t0
 
 
 def _bench_model(max_batch: int, prompt_len: int):
@@ -59,11 +54,8 @@ def _bench_model(max_batch: int, prompt_len: int):
 def _paired_servers(cfg, params, prompts, variants, *, max_batch, prompt_len,
                     warmup, ticks, budget):
     """Serve one engine per target variant and time their decode ticks
-    INTERLEAVED (a, b, a, b, ...): the structural delta is the per-tick
-    graph difference, and interleaving cancels machine drift that
-    sequential phases would alias into the comparison. Each (a, b) tick
-    pair is adjacent in time, so the per-pair difference is the robust
-    statistic — a noise spike only perturbs one pair.
+    interleaved (the shared :mod:`benchmarks._timing` methodology —
+    per-pair deltas cancel machine drift).
 
     ``variants`` is an ordered {label: HardwareTarget}; returns
     ({label: server}, {label: [tick seconds]}).
@@ -82,11 +74,7 @@ def _paired_servers(cfg, params, prompts, variants, *, max_batch, prompt_len,
         for _ in range(warmup):
             se.step()
         pair[label] = se
-    times: dict[str, list[float]] = {label: [] for label in pair}
-    for _ in range(ticks):
-        for label, se in pair.items():
-            times[label].append(_timed_step(se))
-    return pair, times
+    return pair, _timing.interleaved_ticks(pair, ticks=ticks)
 
 
 def _slot_gens(se):
@@ -119,10 +107,10 @@ def measured_sweep(targets, *, max_batch, prompt_len, warmup, ticks):
         )
         for label in pair:
             row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
-        row["paired_deltas_ms"] = [
-            (r - p) * 1e3 for p, r in zip(times["prepared"], times["raw"])
-        ]
-        row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
+        row["paired_deltas_ms"] = _timing.paired_deltas(
+            times["prepared"], times["raw"], scale=1e3
+        )
+        row["paired_delta_ms"] = _timing.pooled_median(row["paired_deltas_ms"])
         prepared_stats = pair["prepared"].stats()
         row["programmed"] = prepared_stats.programmed
         row["program_ms"] = prepared_stats.program_s * 1e3
@@ -177,10 +165,10 @@ def fused_sweep(ks, *, max_batch, prompt_len, warmup, ticks,
         row = {"engine": "packed", "k": k}
         for label in pair:
             row[f"tick_ms_{label}"] = statistics.median(times[label]) * 1e3
-        row["paired_deltas_ms"] = [
-            (u - f) * 1e3 for f, u in zip(times["fused"], times["unfused"])
-        ]
-        row["paired_delta_ms"] = statistics.median(row["paired_deltas_ms"])
+        row["paired_deltas_ms"] = _timing.paired_deltas(
+            times["fused"], times["unfused"], scale=1e3
+        )
+        row["paired_delta_ms"] = _timing.pooled_median(row["paired_deltas_ms"])
         gens = {label: _slot_gens(se) for label, se in pair.items()}
         row["speedup"] = row["tick_ms_unfused"] / max(row["tick_ms_fused"], 1e-9)
         row["exact"] = gens["fused"] == gens["unfused"] and bool(gens["fused"])
@@ -246,7 +234,7 @@ def run(smoke: bool = False, engines=None, ks=None) -> tuple[int, dict]:
     for r in rows:
         if r["engine"] in GATE_ENGINES:
             deltas.setdefault(r["engine"], []).extend(r["paired_deltas_ms"])
-    per_engine = {e: statistics.median(d) for e, d in deltas.items()}
+    per_engine = {e: _timing.pooled_median(d) for e, d in deltas.items()}
     # the gate must not pass vacuously: an --engine restriction that
     # sweeps no gate engine SKIPS the gate (None, reported as such)
     # rather than claiming packed/wdm/tiled were measured faster
@@ -268,7 +256,7 @@ def run(smoke: bool = False, engines=None, ks=None) -> tuple[int, dict]:
     fused_deltas = [d for r in fused_rows for d in r["paired_deltas_ms"]]
     fused_exact = all(r["exact"] for r in fused_rows) if fused_rows else True
     fused_faster = (
-        statistics.median(fused_deltas) > 0 if fused_deltas else None
+        _timing.pooled_median(fused_deltas) > 0 if fused_deltas else None
     )
     if fused_rows:
         print("\n== packed decode tick: fused kernel vs unfused baseline ==")

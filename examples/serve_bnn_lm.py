@@ -77,3 +77,28 @@ n_bin = sum(
 )
 print(f"{n_bin} hidden projection tensors run as XNOR+popcount "
       f"(deployable on EinsteinBarrier or the packed TPU kernel)")
+
+# -- telemetry: the same model through compile() with tracing on -------------
+# obs.session() enables the PR 8 telemetry subsystem for the block:
+# compile-stage spans, fenced per-tick decode spans, scheduler lifecycle
+# events and serving metrics — all off (one None check) outside it.
+from repro import compiler as compiler_lib, obs
+from repro.serving import Request
+
+with obs.session() as tel:
+    compiled = compiler_lib.compile(
+        cfg, params, compiler_lib.HardwareTarget(engine="wdm", group_size=4)
+    )
+    se = compiled.serve(max_batch=4, max_len=16 + GEN)
+    for rid in range(4):
+        se.submit(Request(rid=rid, prompt=prompts[rid][:8], max_new_tokens=GEN))
+    se.drain()
+    report = obs.format_report(obs.crosscheck_serving(se))
+
+print("\n== metrics snapshot (Prometheus text exposition) ==")
+print(tel.metrics.render())
+print("== measured vs modeled decode-tick pricing ==")
+print(report)
+n = tel.tracer.export_chrome("/tmp/serve_bnn_lm_trace.json")
+print(f"wrote {n} trace records -> /tmp/serve_bnn_lm_trace.json "
+      f"(load in chrome://tracing or Perfetto)")

@@ -138,6 +138,41 @@ def scheduler_from_args(args: argparse.Namespace):
     ).validate()
 
 
+def add_obs_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Install the shared telemetry flags (PR 8): either flag turns the
+    :mod:`repro.obs` session on for the whole run."""
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome-trace (chrome://tracing / Perfetto) JSON of "
+        "compile-stage and per-tick spans to PATH (enables telemetry)",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="write a Prometheus-style text snapshot (TTFT, tick latency, "
+        "queue depth, cache counters) to PATH (enables telemetry)",
+    )
+    return ap
+
+
+def obs_from_args(args: argparse.Namespace):
+    """Start a telemetry session when any obs flag was passed; returns
+    the :class:`repro.obs.Telemetry` or ``None`` (telemetry stays off).
+
+    Call BEFORE ``compile()`` so the pipeline-stage spans are captured;
+    export at the end with ``tel.write(trace_out=args.trace_out,
+    metrics_out=args.metrics_out)``.
+    """
+    if getattr(args, "trace_out", None) or getattr(args, "metrics_out", None):
+        from repro import obs
+
+        return obs.start()
+    return None
+
+
 def target_from_args(args: argparse.Namespace) -> HardwareTarget:
     """Build (and statically validate) a HardwareTarget from parsed
     ``add_target_args`` flags."""

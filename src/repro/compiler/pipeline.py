@@ -53,6 +53,7 @@ import dataclasses
 import time
 from typing import Any
 
+from repro import obs
 from repro.compiler.target import (
     GroupSizeError,
     HardwareTarget,
@@ -114,16 +115,63 @@ def compile(cfg, params, target: HardwareTarget, *, plan=None) -> "CompiledModel
 
     Validates the whole combination eagerly (:class:`TargetError`
     subclasses name the mismatch) and returns a :class:`CompiledModel`.
+
+    When a telemetry session is active (:mod:`repro.obs`) each pipeline
+    stage — validate / map / resolve / program — records a span on the
+    ``compile`` track, with the one-time programming cost attached.
     """
-    target = target.validate()
-    if getattr(cfg, "is_encdec", False) and target.engine != "reference":
-        raise TargetError(
-            f"{cfg.name}: hardware targets compile the decoder-only LM "
-            "projection stack; enc-dec models serve through "
-            "cfg.bnn_engine directly"
-        )
+    with obs.span("compile", track="compile",
+                  engine=target.engine, model=getattr(cfg, "name", "?")) as root:
+        cm = _compile_staged(cfg, params, target, plan)
+        root.set(programmed=cm.programmed, program_s=cm.program_s)
+        return cm
+
+
+def _compile_staged(cfg, params, target, plan) -> "CompiledModel":
+    with obs.span("compile.validate", track="compile"):
+        target = target.validate()
+        if getattr(cfg, "is_encdec", False) and target.engine != "reference":
+            raise TargetError(
+                f"{cfg.name}: hardware targets compile the decoder-only LM "
+                "projection stack; enc-dec models serve through "
+                "cfg.bnn_engine directly"
+            )
 
     # -- map: the explicit layer->tile placement ---------------------------
+    with obs.span("compile.map", track="compile") as map_span:
+        plan = _map_stage(cfg, target, plan)
+        if plan is not None:
+            map_span.set(policy=plan.policy, n_tiles=plan.n_tiles)
+
+    # -- resolve: registry backend + bnn config ----------------------------
+    with obs.span("compile.resolve", track="compile") as res_span:
+        base, cfg = _resolve_stage(cfg, target, plan)
+        res_span.set(backend=base.name if base is not None else "none")
+
+    # -- program: the one-time crossbar write ------------------------------
+    programmed, program_s = 0, 0.0
+    if params is not None and base is not None and target.prepare_weights:
+        from repro.models import lm as lm_lib
+
+        with obs.span("compile.program", track="compile") as prog_span:
+            t0 = time.perf_counter()
+            params, programmed = lm_lib.program_weights(params, cfg, base)
+            prog_span.fence(params)
+            program_s = time.perf_counter() - t0
+            prog_span.set(programmed=programmed, program_s=program_s)
+
+    return CompiledModel(
+        cfg=cfg,
+        params=params,
+        target=target,
+        plan=plan,
+        engine=base,
+        programmed=programmed,
+        program_s=program_s,
+    )
+
+
+def _map_stage(cfg, target, plan):
     if plan is not None:
         if target.engine != "tiled":
             raise PlanEngineMismatchError(
@@ -169,8 +217,10 @@ def compile(cfg, params, target: HardwareTarget, *, plan=None) -> "CompiledModel
             policy=target.mapping_policy or cfg.mapping_policy or "tacitmap",
             tile_budget=target.tile_budget,
         )
+    return plan
 
-    # -- resolve: registry backend + bnn config ----------------------------
+
+def _resolve_stage(cfg, target, plan):
     base = resolve_engine(target, cfg, plan)
     if base is not None:
         # a hardware backend executes the binarized projections, so it
@@ -199,24 +249,7 @@ def compile(cfg, params, target: HardwareTarget, *, plan=None) -> "CompiledModel
                 "crossbar step than the tile has wavelengths"
             )
 
-    # -- program: the one-time crossbar write ------------------------------
-    programmed, program_s = 0, 0.0
-    if params is not None and base is not None and target.prepare_weights:
-        from repro.models import lm as lm_lib
-
-        t0 = time.perf_counter()
-        params, programmed = lm_lib.program_weights(params, cfg, base)
-        program_s = time.perf_counter() - t0
-
-    return CompiledModel(
-        cfg=cfg,
-        params=params,
-        target=target,
-        plan=plan,
-        engine=base,
-        programmed=programmed,
-        program_s=program_s,
-    )
+    return base, cfg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,6 +443,13 @@ class CompiledModel:
                 tile_budget=self.target.tile_budget,
             )
         return self._price_plan
+
+    def pricing_plan(self):
+        """Public accessor for the plan the cost model prices (the bound
+        plan, else one compiled lazily on the target's spec/policy).
+        The telemetry cross-check (:mod:`repro.obs.crosscheck`) uses it
+        to price traced decode ticks."""
+        return self._pricing_plan()
 
     def price(self, n_active: int = 16) -> TargetPrice:
         """Plan execution + one-time programming + per-tick readout, in

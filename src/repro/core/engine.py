@@ -94,6 +94,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bnn, custbinarymap, tacitmap, wdm
 from repro.core.crossbar import CrossbarSpec, EPCM_TILE, OPCM_TILE
 
@@ -139,12 +140,20 @@ class PreparedWeights:
 
 
 class LRUCache:
-    """Small bounded LRU with hit/miss/eviction counters (host-side)."""
+    """Small bounded LRU with hit/miss/eviction counters (host-side).
 
-    def __init__(self, maxsize: int = 32):
+    A ``name`` makes the counters *live*: every hit/miss/eviction is
+    mirrored into the active telemetry session's metrics registry
+    (``repro_cache_events_total{cache=<name>,kind=...}``) — one ``None``
+    check per event when telemetry is off. The frozen ``stats`` snapshot
+    stays the source of truth either way.
+    """
+
+    def __init__(self, maxsize: int = 32, name: str | None = None):
         if maxsize < 1:
             raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
         self.maxsize = int(maxsize)
+        self.name = name
         self._store: OrderedDict[Any, Any] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -155,9 +164,13 @@ class LRUCache:
             value = self._store[key]
         except KeyError:
             self.misses += 1
+            if self.name is not None:
+                obs.cache_event(self.name, "miss")
             return default
         self._store.move_to_end(key)
         self.hits += 1
+        if self.name is not None:
+            obs.cache_event(self.name, "hit")
         return value
 
     def put(self, key, value) -> None:
@@ -166,6 +179,8 @@ class LRUCache:
         while len(self._store) > self.maxsize:
             self._store.popitem(last=False)
             self.evictions += 1
+            if self.name is not None:
+                obs.cache_event(self.name, "eviction")
 
     def __len__(self) -> int:
         return len(self._store)
@@ -196,7 +211,7 @@ class WeightCache:
     """
 
     def __init__(self, maxsize: int = 32):
-        self._lru = LRUCache(maxsize)
+        self._lru = LRUCache(maxsize, name="weight_cache")
 
     def get(self, w) -> PreparedWeights | None:
         entry = self._lru.get(id(w))
@@ -635,8 +650,8 @@ class TiledEngine(_EngineBase):
         self.plan = plan
         self.policy = policy
         self.mesh_axis = mesh_axis
-        self._adhoc_cache = LRUCache(self.ADHOC_CACHE_SIZE)
-        self._index_cache = LRUCache(self.ADHOC_CACHE_SIZE)
+        self._adhoc_cache = LRUCache(self.ADHOC_CACHE_SIZE, name="adhoc_placements")
+        self._index_cache = LRUCache(self.ADHOC_CACHE_SIZE, name="placement_indices")
 
     def with_spec(self, spec: CrossbarSpec) -> "TiledEngine":
         keep = self.plan if (self.plan is not None and self.plan.spec == spec) else None

@@ -51,7 +51,28 @@ import dataclasses
 import time
 
 
-def _serve_requests(compiled, args) -> int:
+def _finish_obs(tel, args, se=None) -> None:
+    """Export the telemetry session's artifacts (and, when a serving
+    engine ran traced decode ticks, print the measured-vs-modeled
+    pricing cross-check). No-op when telemetry is off."""
+    if tel is None:
+        return
+    from repro import obs
+
+    if se is not None and tel.tracer.spans("decode_tick"):
+        print("[obs] measured-vs-modeled decode-tick pricing:")
+        print(obs.format_report(obs.crosscheck_serving(se, tracer=tel.tracer)))
+    tel.write(trace_out=args.trace_out, metrics_out=args.metrics_out)
+    if args.trace_out:
+        print(f"[obs] wrote Chrome trace (chrome://tracing / Perfetto) -> "
+              f"{args.trace_out}")
+    if args.metrics_out:
+        print(f"[obs] wrote Prometheus-style metrics snapshot -> "
+              f"{args.metrics_out}")
+    obs.stop()
+
+
+def _serve_requests(compiled, args, tel=None) -> int:
     """The scheduler-fronted path: N requests with staggered prompt
     lengths through ``submit``/``drain``, reported as typed stats."""
     import numpy as np
@@ -103,6 +124,7 @@ def _serve_requests(compiled, args) -> int:
     if done:
         head = done[0]
         print(f"[serve] rid={head.rid} generated[:8] = {head.generated[:8]}")
+    _finish_obs(tel, args, se=se)
     return 0
 
 
@@ -129,6 +151,8 @@ def main(argv: list[str] | None = None) -> int:
     compiler_lib.add_target_args(ap)
     # the serve-time scheduler surface (policy / admission / KV reserve)
     compiler_lib.add_scheduler_args(ap)
+    # the telemetry surface (--trace-out / --metrics-out)
+    compiler_lib.add_obs_args(ap)
     args = ap.parse_args(argv)
     try:
         target = compiler_lib.target_from_args(args)
@@ -172,6 +196,10 @@ def main(argv: list[str] | None = None) -> int:
             eng = engine_lib.get_engine(target.engine)
             print(f"[serve] engine={eng.name} ({eng.info.description})")
 
+    # the telemetry session must be live BEFORE compile() so the
+    # pipeline-stage spans (validate/map/resolve/program) are captured
+    tel = compiler_lib.obs_from_args(args)
+
     max_len = args.prompt_len + args.gen
     key = jax.random.key(args.seed)
     params = (
@@ -205,7 +233,7 @@ def main(argv: list[str] | None = None) -> int:
         # staggered prompt lengths through submit/drain + typed stats
         if cfg.is_encdec:
             ap.error("--requests drives the decoder-only scheduler path")
-        return _serve_requests(compiled, args)
+        return _serve_requests(compiled, args, tel=tel)
 
     batch = lm_batch(cfg, args.batch, args.prompt_len, seed=args.seed)
     tokens = batch["tokens"]
@@ -234,6 +262,9 @@ def main(argv: list[str] | None = None) -> int:
             compiled.init_cache(args.batch, max_len), pre_caches
         )
         decode_step = compiled.decode_step
+    # fence the phase: JAX dispatch is async, so without block_until_ready
+    # this would time the enqueue, not the prefill + cache graft
+    jax.block_until_ready((logits, caches))
     t_prefill = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -245,7 +276,9 @@ def main(argv: list[str] | None = None) -> int:
         logits, caches = decode_step(tok, jnp.asarray(base + i, jnp.int32), caches)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
-    jax.block_until_ready(out[-1])
+    # fence tokens AND the final cache state — the decode phase isn't
+    # done until its last KV write lands
+    jax.block_until_ready((out[-1], caches))
     t_decode = time.time() - t0
 
     gen = jnp.stack(out, axis=1)
@@ -262,6 +295,7 @@ def main(argv: list[str] | None = None) -> int:
               f"{groups} K-groups over {ticks} ticks "
               f"(vs {slot_steps} slot-at-a-time steps, {slot_steps / groups:.1f}x fewer)")
     print(f"[serve] generated[0,:8] = {gen[0, :8].tolist()}")
+    _finish_obs(tel, args)
     return 0
 
 

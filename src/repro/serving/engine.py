@@ -90,6 +90,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm as lm_lib
 from repro.serving.scheduler import (
     Request,
@@ -235,6 +236,7 @@ class ServingEngine:
         self.group_k = compiled.group_size_for(max_batch)
         self.planner = BatchPlanner(self.group_k)
         self._exec = compiled.executor(max_batch)
+        self.engine_name = compiled.target.engine
         self._counts = {
             "ticks": 0, "decoded": 0, "mmm_groups": 0, "pad_lanes": 0,
             "prefills": 0, "evictions": 0, "restores": 0,
@@ -358,12 +360,27 @@ class ServingEngine:
         """Run the request's prompt prefill and graft its KV into the
         slot; emits the first (argmax) token onto the state."""
         prompt = jnp.asarray(st.request.prompt, jnp.int32)[None, :]
-        logits, pre = self._prefill(self.params, prompt)
-        self._graft(slot, pre, prompt.shape[1])
-        st.emit(int(jnp.argmax(logits[0])))
+        with obs.span(
+            "prefill", track="serve", engine=self.engine_name,
+            slot=slot, rid=st.request.rid, prompt_len=st.request.prompt_len,
+        ) as sp:
+            logits, pre = self._prefill(self.params, prompt)
+            self._graft(slot, pre, prompt.shape[1])
+            st.emit(int(jnp.argmax(logits[0])))
+            sp.fence(self.caches)
         self.pos[slot] = st.request.prompt_len
         self.tok[slot] = st.generated[-1]
         self._counts["prefills"] += 1
+        if obs.enabled():
+            obs.observe(
+                "repro_prefill_latency_seconds", sp.duration_s,
+                "prompt prefill wall time (graft fenced)",
+                engine=self.engine_name,
+            )
+            obs.count(
+                "repro_prefills_total", 1, "prompt prefills run",
+                engine=self.engine_name,
+            )
 
     def slot_exhausted(self, slot: int) -> bool:
         """True when the next decode write would run off the slot."""
@@ -395,10 +412,72 @@ class ServingEngine:
 
     def decode_tick(self, running: dict[int, RequestState]) -> None:
         """One K-grouped decode over the running slots: plan, one fused
-        gather/decode/scatter dispatch, then emit each slot's token."""
+        gather/decode/scatter dispatch, then emit each slot's token.
+
+        With telemetry on (:mod:`repro.obs`), each tick records a fenced
+        ``decode_tick`` span (engine, K, active/group/pad lanes, cache
+        hit/miss deltas) plus tick-latency histogram and lane counters;
+        with telemetry off the tick pays one ``None`` check and no extra
+        host synchronization.
+        """
         plan = self.planner.plan(list(running))
         if plan is None:
             return
+        if not obs.enabled():
+            self._run_tick(plan, running)
+            return
+        before = self._cache_totals()
+        with obs.span(
+            "decode_tick", track="serve", engine=self.engine_name,
+            k=plan.k, n_active=plan.n_active, n_groups=plan.n_groups,
+            n_pad=plan.n_pad,
+        ) as sp:
+            self._run_tick(plan, running)
+            sp.fence(self.caches)
+            after = self._cache_totals()
+            sp.set(
+                cache_hits=after[0] - before[0],
+                cache_misses=after[1] - before[1],
+            )
+        obs.observe(
+            "repro_tick_latency_seconds", sp.duration_s,
+            "K-grouped decode tick wall time (cache scatter fenced)",
+            engine=self.engine_name, k=plan.k,
+        )
+        obs.count(
+            "repro_decode_ticks_total", 1, "gathered decode launches",
+            engine=self.engine_name,
+        )
+        obs.count(
+            "repro_decoded_tokens_total", plan.n_active,
+            "real slot-tokens decoded", engine=self.engine_name,
+        )
+        if self._exec is not None:
+            obs.count(
+                "repro_mmm_groups_total", plan.n_groups,
+                "K-groups issued to a registry backend",
+                engine=self.engine_name,
+            )
+        if plan.n_pad:
+            obs.count(
+                "repro_pad_lanes_total", plan.n_pad,
+                "idle wavelengths from ragged tails",
+                engine=self.engine_name,
+            )
+
+    def _cache_totals(self) -> tuple[int, int]:
+        """(hits, misses) summed over the backend's caches — the span's
+        per-tick delta source (only read with telemetry on)."""
+        if self._exec is None or not hasattr(self._exec, "cache_stats"):
+            return (0, 0)
+        stats = self._exec.cache_stats().values()
+        return (
+            sum(s.get("hits", 0) for s in stats),
+            sum(s.get("misses", 0) for s in stats),
+        )
+
+    def _run_tick(self, plan: GroupPlan, running: dict[int, RequestState]) -> None:
+        """The tick body: fused dispatch, counters, token emission."""
         if plan.n_active == self.max_batch and plan.n_pad == 0:
             logits, self.caches = self._decode_full(
                 self.params, jnp.asarray(self.tok), jnp.asarray(self.pos), self.caches
