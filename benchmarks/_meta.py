@@ -12,6 +12,7 @@ degrades to ``"unknown"``, never an exception inside a benchmark run).
 from __future__ import annotations
 
 import datetime
+import os
 import subprocess
 
 # bump when the {"smoke", "rc", "sections"} document shape changes
@@ -19,14 +20,19 @@ BENCH_SCHEMA_VERSION = 1
 
 
 def _git_sha() -> str:
+    # pin cwd to the repo (benchmarks may run from anywhere) and treat
+    # ANY failure — no git binary, not a repo, detached worktree, odd
+    # permissions — as "unknown": provenance is best-effort, a benchmark
+    # run must never crash over missing git metadata
     try:
         out = subprocess.run(
             ["git", "rev-parse", "HEAD"],
             capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
         )
         sha = out.stdout.strip()
         return sha if out.returncode == 0 and sha else "unknown"
-    except (OSError, subprocess.SubprocessError):
+    except Exception:
         return "unknown"
 
 

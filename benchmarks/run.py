@@ -39,6 +39,11 @@ Sections:
                       engine x K), tracing-on/off bit-exactness, the
                       disabled-path overhead bound, and a sample Chrome
                       trace artifact (``BENCH_obs.json`` + trace.json)
+ 15. faults        — fault-injection gate: null fault model bit-identical
+                      per engine, planted stuck cells fire the consistency
+                      probe, mid-serve tile failure -> health-monitor
+                      remap onto spares with solo-exact generations +
+                      modeled remap cost (``BENCH_faults.json``)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -67,6 +72,7 @@ SECTIONS = (
     "kernels",
     "scheduler",
     "obs",
+    "faults",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -147,6 +153,8 @@ def main(argv: list[str] | None = None) -> int:
     )
     # aliased: `obs` unqualified would shadow repro.obs at call sites
     from benchmarks import obs as obs_bench
+    # aliased: keep the section import style uniform with repro.faults
+    from benchmarks import faults as faults_bench
 
     rc = 0
     results: dict[str, dict] = {}
@@ -193,6 +201,9 @@ def main(argv: list[str] | None = None) -> int:
     if "obs" in wanted:
         o_rc, payload = obs_bench.run(smoke=args.smoke)
         rc |= record("obs", o_rc, payload)
+    if "faults" in wanted:
+        f_rc, payload = faults_bench.run(smoke=args.smoke)
+        rc |= record("faults", f_rc, payload)
 
     if args.out:
         from benchmarks._meta import bench_header

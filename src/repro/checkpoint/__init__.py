@@ -1,4 +1,9 @@
 """Fault-tolerant checkpointing (atomic writes, async snapshots,
 mesh-agnostic restore)."""
 
-from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    CorruptCheckpointError,
+    restore_tree,
+    save_tree,
+)

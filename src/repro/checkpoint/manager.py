@@ -39,6 +39,14 @@ SEP = "/"
 _MARKER = "COMPLETE"
 
 
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint directory carries the COMPLETE marker but its
+    manifest or array payload does not load — on-disk corruption (bit
+    rot, truncated copy, concurrent writer). Named so restore callers
+    can distinguish 'no checkpoint' (FileNotFoundError) from 'a
+    checkpoint that must not be trusted'."""
+
+
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -71,9 +79,18 @@ def save_tree(path: str, tree: Any, extra: dict | None = None) -> None:
         json.dump(manifest, f)
     with open(os.path.join(tmp, _MARKER), "w") as f:
         f.write("ok")
+    # Overwrite atomically: rename the old snapshot ASIDE first, then
+    # rename the complete tmp dir INTO place, then drop the old one.
+    # At no instant does `path` name a partially-deleted or
+    # partially-written snapshot (the pre-PR 9 rmtree-then-replace had
+    # a window where a crash left NO checkpoint at all). The aside dir
+    # never shadows a real snapshot: steps() requires an int suffix.
+    old = f"{path}.old-{os.getpid()}"
+    shutil.rmtree(old, ignore_errors=True)  # stale aside from a crash
     if os.path.isdir(path):
-        shutil.rmtree(path)
+        os.replace(path, old)
     os.replace(tmp, path)
+    shutil.rmtree(old, ignore_errors=True)
 
 
 def restore_tree(path: str, like: Any, shardings: Any | None = None) -> tuple[Any, dict]:
@@ -81,9 +98,23 @@ def restore_tree(path: str, like: Any, shardings: Any | None = None) -> tuple[An
     ``shardings`` (same pytree structure, or a single sharding)."""
     if not os.path.exists(os.path.join(path, _MARKER)):
         raise FileNotFoundError(f"no complete checkpoint at {path}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint at {path} is marked complete but its manifest "
+            f"({manifest_path}) does not load: {e}"
+        ) from e
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        data = np.load(npz_path)
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint at {path} is marked complete but its array "
+            f"payload ({npz_path}) does not load: {e}"
+        ) from e
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path_keys, leaf in paths:

@@ -57,6 +57,7 @@ from repro.compiler.cli import (  # noqa: F401
 )
 from repro.compiler.pipeline import (  # noqa: F401
     CompiledModel,
+    RemapReport,
     TargetPrice,
     compile,
     resolve_engine,

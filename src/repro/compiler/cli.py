@@ -77,6 +77,32 @@ def add_target_args(
         help="skip the one-time crossbar-programming phase and re-run "
         "the weight-side transforms every tick (benchmark baseline)",
     )
+    ap.add_argument(
+        "--fault-rate",
+        type=float,
+        default=None,
+        metavar="P",
+        help="inject deterministic stuck-cell faults: per-cell "
+        "probability P split evenly between stuck-SET and stuck-RESET "
+        "(wraps the backend in repro.faults.FaultyEngine; requires a "
+        "non-reference --engine)",
+    )
+    ap.add_argument(
+        "--fault-seed",
+        type=int,
+        default=0,
+        metavar="SEED",
+        help="root seed of the per-tile fault RNG streams (only with "
+        "--fault-rate)",
+    )
+    ap.add_argument(
+        "--spare-tiles",
+        type=int,
+        default=0,
+        metavar="N",
+        help="provision N extra physical tiles as fault-remap "
+        "destinations in the mapping plan (requires --engine tiled)",
+    )
     return ap
 
 
@@ -176,10 +202,22 @@ def obs_from_args(args: argparse.Namespace):
 def target_from_args(args: argparse.Namespace) -> HardwareTarget:
     """Build (and statically validate) a HardwareTarget from parsed
     ``add_target_args`` flags."""
+    fault_model = None
+    fault_rate = getattr(args, "fault_rate", None)
+    if fault_rate is not None:
+        from repro.faults import FaultModel
+
+        fault_model = FaultModel(
+            seed=getattr(args, "fault_seed", 0),
+            stuck_set_rate=fault_rate / 2.0,
+            stuck_reset_rate=fault_rate / 2.0,
+        )
     return HardwareTarget(
         engine=args.engine or "reference",
         group_size=args.group_size or None,
         mapping_policy=args.mapping_policy,
         tile_budget=args.tile_budget,
         prepare_weights=not getattr(args, "raw_weights", False),
+        spare_tiles=getattr(args, "spare_tiles", 0),
+        fault_model=fault_model,
     ).validate()

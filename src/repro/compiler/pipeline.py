@@ -100,7 +100,12 @@ def resolve_engine(target: HardwareTarget, cfg=None, plan=None):
         kw = {"plan": plan, "policy": policy or "tacitmap"}
         if target.mesh_axis is not None:
             kw["mesh_axis"] = target.mesh_axis
-    return engine_lib.get_engine(target.engine, target.spec, **kw)
+    base = engine_lib.get_engine(target.engine, target.spec, **kw)
+    if target.fault_model is not None:
+        from repro.faults.engine import FaultyEngine
+
+        base = FaultyEngine(base, target.fault_model)
+    return base
 
 
 def compile(cfg, params, target: HardwareTarget, *, plan=None) -> "CompiledModel":
@@ -208,6 +213,12 @@ def _map_stage(cfg, target, plan):
                 f"plan compiled with tile_budget={plan.tile_budget} — drop "
                 "the field or recompile the plan under the target's budget"
             )
+        if target.spare_tiles and len(plan.spares) != target.spare_tiles:
+            raise TargetError(
+                f"target names spare_tiles={target.spare_tiles} but binds a "
+                f"plan provisioning {len(plan.spares)} spare(s) — drop the "
+                "field or recompile the plan with the target's spare budget"
+            )
     elif target.wants_plan:
         from repro.mapping import compile_plan
 
@@ -216,6 +227,7 @@ def _map_stage(cfg, target, plan):
             spec=target.spec or _default_spec(target.engine),
             policy=target.mapping_policy or cfg.mapping_policy or "tacitmap",
             tile_budget=target.tile_budget,
+            spare_tiles=target.spare_tiles,
         )
     return plan
 
@@ -250,6 +262,20 @@ def _resolve_stage(cfg, target, plan):
             )
 
     return base, cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapReport:
+    """``CompiledModel.remap()``: what moved and what reprogramming cost.
+
+    ``cost`` is a ``costmodel.ProgrammingCost`` covering ONLY the moved
+    blocks — incremental remapping's point is that untouched tiles keep
+    their cells."""
+
+    moves: tuple          # mapping.BlockMove per relocated block
+    cost: Any             # costmodel.ProgrammingCost of the reprogram
+    failed_tiles: frozenset[int]
+    spares_left: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,10 +353,17 @@ class CompiledModel:
     def group_size_for(self, batch: int) -> int:
         """The K the BatchPlanner/executor uses for a ``batch``-slot pool
         (explicit target K > plan WDM capacity > engine capability >
-        one vmap'd group; clamped to the pool)."""
-        return engine_lib.resolve_group_size(
+        one vmap'd group; clamped to the pool — and, under fault
+        injection, to the surviving WDM lanes)."""
+        k = engine_lib.resolve_group_size(
             self.engine, self.target.group_size, batch, plan=self.plan
         )
+        cap_fn = getattr(self.engine, "effective_group_cap", None)
+        if callable(cap_fn):
+            cap = cap_fn()
+            if cap is not None:
+                k = max(1, min(k, cap))
+        return k
 
     def executor(self, batch: int):
         """The K-grouped execution adapter for a ``batch``-slot pool
@@ -423,6 +456,115 @@ class CompiledModel:
 
         return ServingEngine(
             self, max_batch=max_batch, max_len=max_len, scheduler=scheduler
+        )
+
+    # -- fault tolerance (PR 9) ---------------------------------------------
+
+    def _fault_engine(self):
+        from repro.faults.engine import FaultyEngine
+
+        return self.engine if isinstance(self.engine, FaultyEngine) else None
+
+    def _fault_artifacts(self):
+        """Every resident PreparedWeights in the programmed params."""
+        if self.params is None:
+            return []
+        import jax
+
+        leaf = lambda x: isinstance(x, engine_lib.PreparedWeights)  # noqa: E731
+        return [
+            pw for pw in jax.tree.leaves(self.params, is_leaf=leaf) if leaf(pw)
+        ]
+
+    def _refresh_artifacts(self):
+        """Re-derive every resident artifact under the wrapper's CURRENT
+        fault state / inner engine (the reprogramming step)."""
+        import jax
+
+        eng = self.engine
+        leaf = lambda x: isinstance(x, engine_lib.PreparedWeights)  # noqa: E731
+        return jax.tree.map(
+            lambda x: eng.refresh(x) if leaf(x) else x, self.params, is_leaf=leaf
+        )
+
+    def scan_faults(self):
+        """One consistency sweep over all resident artifacts: the
+        :class:`repro.faults.FaultMap` of physical tiles holding
+        corrupted cells plus the dead WDM lanes. Empty (falsy) on a
+        non-fault-injecting target."""
+        from repro.faults import FaultMap
+
+        eng = self._fault_engine()
+        if eng is None:
+            return FaultMap()
+        tiles: frozenset[int] = frozenset()
+        for pw in self._fault_artifacts():
+            tiles |= eng.locate(pw)
+        if tiles:
+            obs.count(
+                "repro_faults_detected_total", len(tiles),
+                "faulty physical tiles flagged by consistency sweeps",
+            )
+        return FaultMap(tiles=tiles, lanes=eng.dead_lanes())
+
+    def refresh_faults(self) -> None:
+        """Reprogram all artifacts after the fault state changed
+        (``engine.fail_tile`` / ``engine.advance_drift``) so execution
+        observes the new state."""
+        if self._fault_engine() is None:
+            raise TargetError(
+                "refresh_faults() needs a fault-injecting target "
+                "(HardwareTarget(fault_model=...))"
+            )
+        if self.params is not None:
+            self.params = self._refresh_artifacts()
+        self._jit.clear()
+
+    def remap(self, fault_map) -> "RemapReport":
+        """Move ONLY the blocks resident on the fault map's tiles onto
+        clean spares, rebind the (re-placed) inner engine under the same
+        fault state, and reprogram just the refreshed artifacts.
+
+        Raises :class:`repro.mapping.SpareTilesExhaustedError` when the
+        clean-spare pool can't cover the displaced blocks, and
+        :class:`TargetError` when the target has no fault wrapper or no
+        plan to re-place."""
+        from repro.mapping import remap_plan
+
+        eng = self._fault_engine()
+        if eng is None:
+            raise TargetError(
+                "remap() needs a fault-injecting target "
+                "(HardwareTarget(fault_model=...))"
+            )
+        if self.plan is None:
+            raise TargetError(
+                "remap() re-places an explicit MappingPlan — compile with "
+                "the 'tiled' engine and spare_tiles/mapping_policy set"
+            )
+        tiles = frozenset(getattr(fault_map, "tiles", fault_map))
+        with obs.span("remap", track="compile", tiles=sorted(tiles)) as sp:
+            new_plan, delta = remap_plan(
+                self.plan, tiles, tile_ok=eng.tile_is_clean
+            )
+            inner = resolve_engine(
+                dataclasses.replace(self.target, fault_model=None),
+                self.cfg, new_plan,
+            )
+            self.plan = new_plan
+            self._price_plan = new_plan
+            self.engine = eng.rebind(inner)
+            if self.params is not None:
+                self.params = self._refresh_artifacts()
+            # cached executors close over the OLD wrapper — drop them
+            self._jit.clear()
+            sp.set(moves=len(delta.moves), spares_left=len(new_plan.spares))
+        obs.count("repro_remaps_total", 1, "fault-driven incremental remaps")
+        return RemapReport(
+            moves=delta.moves,
+            cost=delta.cost,
+            failed_tiles=tiles,
+            spares_left=len(new_plan.spares),
         )
 
     # -- pricing / reporting ------------------------------------------------

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.crossbar import CrossbarSpec
+from repro.faults.model import FaultModel, FaultModelError
 
 
 class TargetError(ValueError):
@@ -76,6 +77,15 @@ class HardwareTarget:
       launch) on engines that support it (``packed``). ``False`` keeps
       the unfused multi-op path — the benchmark baseline. Bit-exact
       either way.
+    * ``spare_tiles`` — provision that many extra physical tiles as
+      fault-remap destinations in the compiled
+      :class:`~repro.mapping.allocator.MappingPlan` (PR 9). Implies a
+      plan, so only meaningful with the ``tiled`` engine.
+    * ``fault_model`` — a :class:`repro.faults.FaultModel`: wrap the
+      resolved backend in a :class:`repro.faults.FaultyEngine` that
+      deterministically injects the model's stuck cells / drift / dead
+      lanes / tile failures. A null model is bit-identical to the
+      unwrapped engine.
     """
 
     engine: str = "reference"
@@ -86,6 +96,8 @@ class HardwareTarget:
     prepare_weights: bool = True
     mesh_axis: str | None = None
     fused: bool = True
+    spare_tiles: int = 0
+    fault_model: FaultModel | None = None
 
     def __post_init__(self):
         # normalize the CLI's "0 = auto" convention to None
@@ -97,7 +109,11 @@ class HardwareTarget:
     @property
     def wants_plan(self) -> bool:
         """True when this target asks for an explicit MappingPlan."""
-        return self.mapping_policy is not None or self.tile_budget is not None
+        return (
+            self.mapping_policy is not None
+            or self.tile_budget is not None
+            or self.spare_tiles > 0
+        )
 
     def validate(self) -> "HardwareTarget":
         """Eager static validation (no model needed); returns self.
@@ -142,6 +158,22 @@ class HardwareTarget:
                 f"is {self.engine!r} — the knob would be silently dropped "
                 "(no other engine has a fused path to disable)"
             )
+        if self.spare_tiles < 0:
+            raise TargetError(
+                f"spare_tiles must be >= 0, got {self.spare_tiles}"
+            )
+        if self.fault_model is not None:
+            try:
+                self.fault_model.validate()
+            except FaultModelError as e:
+                raise TargetError(f"invalid fault_model: {e}") from e
+            if self.engine == "reference":
+                raise TargetError(
+                    "fault_model requires a crossbar backend to wrap, but "
+                    "engine='reference' executes the plain jnp math with no "
+                    "engine object — pick tacitmap/wdm/packed/tiled/"
+                    "custbinarymap to inject faults"
+                )
         if self.mesh_axis is not None and self.engine != "tiled":
             raise TargetError(
                 f"mesh_axis={self.mesh_axis!r} names the mesh axis the "
@@ -173,4 +205,10 @@ class HardwareTarget:
             parts.append(f"fused={self.fused}")
         if self.mesh_axis is not None:
             parts.append(f"mesh_axis={self.mesh_axis}")
+        if self.spare_tiles:
+            parts.append(f"spares={self.spare_tiles}")
+        if self.fault_model is not None:
+            parts.append(
+                "faults=" + self.fault_model.describe().removeprefix("[faults] ")
+            )
         return "[target] " + " ".join(parts)

@@ -58,11 +58,15 @@ binarized matmuls through the plan-driven ``tiled`` engine::
 
 from repro.mapping.allocator import (  # noqa: F401
     POLICIES,
+    BlockMove,
     BlockPlacement,
     LayerPlan,
     MappingPlan,
+    RemapDelta,
+    SpareTilesExhaustedError,
     allocate,
     balance_ratio,
+    remap_plan,
     required_tiles,
 )
 from repro.mapping.ir import (  # noqa: F401

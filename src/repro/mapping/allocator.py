@@ -43,6 +43,10 @@ from repro.mapping.ir import LayerIR, ModelIR, to_ir
 POLICIES: tuple[str, ...] = ("tacitmap", "column-major", "greedy")
 
 
+class SpareTilesExhaustedError(RuntimeError):
+    """A remap needed more clean spare tiles than the plan has left."""
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockPlacement:
     """One ``spec.rows x spec.cols`` weight block pinned to a tile."""
@@ -114,10 +118,18 @@ class MappingPlan:
     policy: str
     tile_budget: int | None
     layers: tuple[LayerPlan, ...]
+    # fault tolerance (PR 9): physical tiles provisioned as remap
+    # destinations but holding no data yet, and tiles the allocator was
+    # told to avoid (known-bad hardware / quarantined after a remap)
+    spares: tuple[int, ...] = ()
+    avoid_tiles: tuple[int, ...] = ()
 
     @property
     def n_tiles(self) -> int:
-        return 1 + max(b.tile for lp in self.layers for b in lp.blocks)
+        used = max(b.tile for lp in self.layers for b in lp.blocks)
+        if self.spares:
+            used = max(used, max(self.spares))
+        return 1 + used
 
     @property
     def n_blocks(self) -> int:
@@ -198,6 +210,8 @@ def allocate(
     spec: CrossbarSpec = EPCM_TILE,
     policy: str = "tacitmap",
     tile_budget: int | None = None,
+    spare_tiles: int = 0,
+    avoid_tiles=(),
 ) -> MappingPlan:
     """Compile a model (ModelConfig / NetworkDesc / ModelIR) into a
     :class:`MappingPlan` under one placement policy.
@@ -205,11 +219,24 @@ def allocate(
     ``tile_budget`` caps the physical tile pool; ``None`` provisions one
     tile per block (the spatial-architecture ideal every policy then
     trivially satisfies with steps_per_vector == 1).
+
+    Fault tolerance (PR 9): ``spare_tiles`` provisions that many extra
+    physical tiles holding no data — the remap destinations
+    :func:`remap_plan` draws from when tiles fail in the field.
+    ``avoid_tiles`` names physical tile ids the allocator must skip
+    entirely (a known fault map): data and spares are assigned to the
+    lowest usable ids around the holes, so a plan compiled against a
+    fault map never touches a bad tile.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown mapping policy {policy!r}; known: {', '.join(POLICIES)}")
     if tile_budget is not None and tile_budget < 1:
         raise ValueError(f"tile_budget must be >= 1, got {tile_budget}")
+    if spare_tiles < 0:
+        raise ValueError(f"spare_tiles must be >= 0, got {spare_tiles}")
+    avoid = frozenset(int(t) for t in avoid_tiles)
+    if any(t < 0 for t in avoid):
+        raise ValueError(f"avoid_tiles must be >= 0: {sorted(avoid)}")
     model = to_ir(source)
     wavelengths = tuple(range(spec.wdm_k))
 
@@ -223,13 +250,23 @@ def allocate(
 
     n_tiles = len(pending) if tile_budget is None else min(tile_budget, len(pending))
 
+    # the physical pool: lowest tile ids that are not avoided — first
+    # ``n_tiles`` hold data, the next ``spare_tiles`` are the spares
+    pool: list[int] = []
+    t = 0
+    while len(pool) < n_tiles + spare_tiles:
+        if t not in avoid:
+            pool.append(t)
+        t += 1
+    data_pool, spare_pool = pool[:n_tiles], pool[n_tiles:]
+
     # tile assignment
     assigned: list[tuple[str, LayerIR, tuple[int, int, int, int], int]] = []
     if policy == "greedy":
         # LPT: heaviest block first onto the least-loaded physical tile
         # (a (load, tile) heap keeps this O(B log T) — qwen-class plans
         # place ~10k blocks)
-        heap = [(0, t) for t in range(n_tiles)]
+        heap = [(0, t) for t in data_pool]
         heapq.heapify(heap)
         order = sorted(
             range(len(pending)), key=lambda i: -(pending[i][2][2] * pending[i][2][3])
@@ -245,7 +282,7 @@ def allocate(
         # sequential striping in enumeration order (round-robin under a
         # budget — the deterministic layouts the paper figures draw)
         for i, (inst, ir, blk) in enumerate(pending):
-            assigned.append((inst, ir, blk, i % n_tiles))
+            assigned.append((inst, ir, blk, data_pool[i % n_tiles]))
 
     # group back into per-instance LayerPlans, preserving block order
     by_instance: dict[str, list[BlockPlacement]] = {}
@@ -270,7 +307,118 @@ def allocate(
     return MappingPlan(
         model=model, spec=spec, policy=policy,
         tile_budget=tile_budget, layers=layer_plans,
+        spares=tuple(spare_pool), avoid_tiles=tuple(sorted(avoid)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Fault-aware remapping (PR 9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMove:
+    """One weight block relocated from a failed tile to a spare."""
+
+    layer: str
+    row_block: int
+    col_block: int
+    src: int
+    dst: int
+    cells: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapDelta:
+    """What a remap did and what it costs to reprogram.
+
+    ``cost`` prices ONLY the moved blocks (tiles reprogram in parallel,
+    rows within a destination tile serially — the same physics as
+    ``costmodel.layer_programming_cost``), which is the whole point of
+    incremental remapping: untouched tiles keep their cells.
+    """
+
+    moves: tuple[BlockMove, ...]
+    cost: "object"  # costmodel.ProgrammingCost (lazy import below)
+
+
+def remap_plan(
+    plan: MappingPlan,
+    failed_tiles,
+    *,
+    tile_ok=None,
+) -> tuple[MappingPlan, RemapDelta]:
+    """Re-place only the blocks resident on ``failed_tiles`` onto the
+    plan's spare pool.
+
+    ``tile_ok`` (optional predicate ``tile_id -> bool``) lets the caller
+    BIST candidate spares before committing — the serving path passes
+    ``FaultyEngine.tile_is_clean`` so a remap never lands on a spare
+    that is itself faulty. Spares consumed (or found failed/unclean)
+    leave the pool; failed tiles join ``avoid_tiles`` so a later
+    recompile also skips them. Raises :class:`SpareTilesExhaustedError`
+    when the usable spare pool can't cover the displaced blocks.
+    """
+    from repro.core import costmodel
+
+    failed = frozenset(int(t) for t in failed_tiles)
+    params = costmodel.params_for_spec(plan.spec)
+    if not failed:
+        return plan, RemapDelta(
+            moves=(), cost=costmodel.ProgrammingCost(cells=0, energy_pj=0.0, time_ns=0.0)
+        )
+
+    candidates = [
+        t for t in plan.spares
+        if t not in failed and (tile_ok is None or tile_ok(t))
+    ]
+    displaced = sum(
+        1 for lp in plan.layers for b in lp.blocks if b.tile in failed
+    )
+    if displaced > len(candidates):
+        raise SpareTilesExhaustedError(
+            f"{plan.model.name}: {displaced} block(s) displaced from failed "
+            f"tiles {sorted(failed)} but only {len(candidates)} clean spare "
+            f"tile(s) usable (of {len(plan.spares)} provisioned)"
+        )
+
+    moves: list[BlockMove] = []
+    next_spare = iter(candidates)
+    used: set[int] = set()
+    rows_per_dst: dict[int, int] = {}
+    new_layers = []
+    for lp in plan.layers:
+        blocks = []
+        for b in lp.blocks:
+            if b.tile in failed:
+                dst = next(next_spare)
+                used.add(dst)
+                moves.append(BlockMove(
+                    layer=lp.name, row_block=b.row_block, col_block=b.col_block,
+                    src=b.tile, dst=dst, cells=b.cells,
+                ))
+                rows_per_dst[dst] = rows_per_dst.get(dst, 0) + b.rows_used
+                b = dataclasses.replace(b, tile=dst)
+            blocks.append(b)
+        new_layers.append(dataclasses.replace(lp, blocks=tuple(blocks)))
+
+    new_plan = dataclasses.replace(
+        plan,
+        layers=tuple(new_layers),
+        spares=tuple(t for t in plan.spares if t not in used and t not in failed),
+        avoid_tiles=tuple(sorted(set(plan.avoid_tiles) | failed)),
+    )
+
+    # price the reprogramming: destination tiles write in parallel, rows
+    # within one destination serially (mirrors layer_programming_cost)
+    cells = sum(mv.cells for mv in moves)
+    time_ns = (max(rows_per_dst.values()) * params.t_row_write_ns) if rows_per_dst else 0.0
+    cost = costmodel.ProgrammingCost(
+        cells=cells,
+        energy_pj=cells * params.e_cell_write_pj,
+        time_ns=time_ns,
+    )
+    return new_plan, RemapDelta(moves=tuple(moves), cost=cost)
 
 
 def balance_ratio(plan: MappingPlan) -> float:

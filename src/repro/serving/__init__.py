@@ -10,6 +10,7 @@ from repro.serving.engine import (
     ServingStats,
 )
 from repro.serving.scheduler import (
+    DegradedServiceError,
     Request,
     RequestRejectedError,
     RequestScheduler,
@@ -24,6 +25,7 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "BatchPlanner",
+    "DegradedServiceError",
     "GroupPlan",
     "LegacyServingSignatureError",
     "Request",

@@ -247,8 +247,31 @@ class ServingEngine:
         self.tok = np.zeros((max_batch,), np.int32)        # last emitted token
         self._free = set(range(max_batch))
 
+        self._build_dispatches()
+
+        self.scheduler = RequestScheduler(self, scheduler)
+
+        # fault tolerance (PR 9): a fault-injecting backend gets a
+        # health monitor — sampled consistency sweeps, quarantine +
+        # remap, K shrink on dead lanes, graceful degradation
+        from repro.faults.engine import FaultyEngine
+        from repro.faults.monitor import HealthMonitor
+
+        self.health = (
+            HealthMonitor(self)
+            if isinstance(compiled.engine, FaultyEngine) else None
+        )
+
+    def _build_dispatches(self) -> None:
+        """(Re)build the jitted prefill/decode dispatches around the
+        CURRENT executor. Called at construction and by :meth:`_rebind`
+        after a fault remap — the closures capture the executor by
+        value, so stale jit caches can never serve a replaced engine."""
+        cfg = self.cfg
+        ex = self._exec
+
         self._prefill = jax.jit(
-            lambda p, t: lm_lib.prefill(p, t, cfg, engine=self._exec)
+            lambda p, t: lm_lib.prefill(p, t, cfg, engine=ex)
         )
 
         def gathered_decode(p, tok, pos, caches, idx):
@@ -260,7 +283,7 @@ class ServingEngine:
             # exact; slots outside `idx` are never touched.
             gathered = jax.tree.map(lambda c: jnp.take(c, idx, axis=1), caches)
             logits, new_c = lm_lib.decode_step(
-                p, tok[idx], pos[idx], gathered, cfg, engine=self._exec
+                p, tok[idx], pos[idx], gathered, cfg, engine=ex
             )
             caches = jax.tree.map(
                 lambda dst, src: dst.at[:, idx].set(src.astype(dst.dtype)),
@@ -279,12 +302,21 @@ class ServingEngine:
         # O(pool * max_len) cache copies and decode in place
         self._decode_full = jax.jit(
             lambda p, tok, pos, c: lm_lib.decode_step(
-                p, tok, pos, c, cfg, engine=self._exec
+                p, tok, pos, c, cfg, engine=ex
             ),
             donate_argnums=(3,),
         )
 
-        self.scheduler = RequestScheduler(self, scheduler)
+    def _rebind(self) -> None:
+        """Resynchronize with the compiled model after it changed under
+        us (fault remap re-placed the plan / dead lanes shrank K):
+        refreshed params, a new K planner, and freshly traced
+        dispatches over the new executor."""
+        self.params = self.compiled.params
+        self.group_k = self.compiled.group_size_for(self.max_batch)
+        self.planner = BatchPlanner(self.group_k)
+        self._exec = self.compiled.executor(self.max_batch)
+        self._build_dispatches()
 
     # -- client API (delegates to the request scheduler) ---------------------
 
@@ -391,7 +423,10 @@ class ServingEngine:
         rows are materialized as NEW arrays, so later donated decode
         ticks cannot alias them) and free the slot."""
         rows = jax.tree.map(lambda c: jnp.array(c[:, slot]), self.caches)
-        snap = SlotSnapshot(pos=int(self.pos[slot]), tok=int(self.tok[slot]), rows=rows)
+        snap = SlotSnapshot(
+            pos=int(self.pos[slot]), tok=int(self.tok[slot]), rows=rows,
+            tick=self._counts["ticks"],
+        )
         self.release_slot(slot)
         self._counts["evictions"] += 1
         return snap
@@ -425,6 +460,8 @@ class ServingEngine:
             return
         if not obs.enabled():
             self._run_tick(plan, running)
+            if self.health is not None:
+                self.health.after_tick()
             return
         before = self._cache_totals()
         with obs.span(
@@ -464,6 +501,8 @@ class ServingEngine:
                 "idle wavelengths from ragged tails",
                 engine=self.engine_name,
             )
+        if self.health is not None:
+            self.health.after_tick()
 
     def _cache_totals(self) -> tuple[int, int]:
         """(hits, misses) summed over the backend's caches — the span's

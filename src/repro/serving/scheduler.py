@@ -81,6 +81,13 @@ class SchedulerExhaustedError(RuntimeError):
     """``drain()`` hit its tick cap with requests still in flight."""
 
 
+class DegradedServiceError(RuntimeError):
+    """A streamed request FAILED because the service degraded (fault
+    tolerance out of moves: spare tiles exhausted / remap budget spent).
+    Individual requests fail with this named error — the engine object
+    itself stays alive and keeps rejecting new work gracefully."""
+
+
 class RequestStatus(enum.Enum):
     WAITING = "waiting"        # queued, not yet admitted
     RUNNING = "running"        # holds a slot, decoding
@@ -88,9 +95,15 @@ class RequestStatus(enum.Enum):
     FINISHED = "finished"      # hit its token budget (or cache capacity)
     REJECTED = "rejected"      # graceful admission-control rejection
     EXPIRED = "expired"        # deadline_ticks elapsed before finishing
+    FAILED = "failed"          # service degraded with the request in flight
 
 
-TERMINAL = (RequestStatus.FINISHED, RequestStatus.REJECTED, RequestStatus.EXPIRED)
+TERMINAL = (
+    RequestStatus.FINISHED,
+    RequestStatus.REJECTED,
+    RequestStatus.EXPIRED,
+    RequestStatus.FAILED,
+)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -131,6 +144,9 @@ class SlotSnapshot:
     pos: int
     tok: int
     rows: Any       # pytree of per-slot cache rows (device arrays)
+    tick: int = -1  # pool tick the snapshot was taken at (fault-tolerance
+    #                 watermark: snapshots older than the last probe-clean
+    #                 tick are trusted across a remap; newer ones restart)
 
 
 @dataclasses.dataclass
@@ -148,6 +164,7 @@ class RequestState:
     finish_tick: int | None = None
     preemptions: int = 0
     reject_reason: str | None = None
+    fail_reason: str | None = None
     snapshot: SlotSnapshot | None = None
 
     # -- convenience views ---------------------------------------------------
@@ -231,6 +248,9 @@ class SchedulerStats:
     expired: int
     preempted: int
     resumed: int
+    failed: int                 # FAILED by service degradation
+    restarted: int              # requeued-from-scratch after fault remaps
+    degraded_reason: str | None  # non-None once the service degraded
     queue_depth: int            # waiting now
     running: int                # slots held now
     max_queue_depth: int
@@ -260,8 +280,14 @@ class RequestScheduler:
         self._seq = 0
         self._counts = {
             "submitted": 0, "admitted": 0, "finished": 0, "rejected": 0,
-            "expired": 0, "preempted": 0, "resumed": 0,
+            "expired": 0, "preempted": 0, "resumed": 0, "failed": 0,
+            "restarted": 0,
         }
+        # fault tolerance: set by degrade() — new submissions are then
+        # rejected with this reason; terminal states produced OUTSIDE
+        # step() (degrade mid-tick) queue here until the next step()
+        self.degraded_reason: str | None = None
+        self._async_terminal: list[RequestState] = []
         self._max_queue_depth = 0
         self._wait_ticks = [0, 0.0]   # [n admitted, total submit->admit ticks]
         self._ttft = [0, 0.0]         # [n first tokens, total ticks]
@@ -326,6 +352,8 @@ class RequestScheduler:
         return st
 
     def _rejection_reason(self, req: Request) -> str | None:
+        if self.degraded_reason is not None:
+            return f"service degraded: {self.degraded_reason}"
         if req.max_new_tokens < 1:
             return f"max_new_tokens must be >= 1, got {req.max_new_tokens}"
         if req.prompt_len + 1 > self.pool.slot_capacity:
@@ -356,7 +384,9 @@ class RequestScheduler:
 
     def step(self) -> list[RequestState]:
         """One scheduling tick. Returns states that became terminal."""
-        out = self._expire()
+        out = list(self._async_terminal)
+        self._async_terminal.clear()
+        out += self._expire()
         self._admit()
         if self.config.admission == "partial":
             self._reconcile_budget()
@@ -404,6 +434,11 @@ class RequestScheduler:
     def drain(self, max_ticks: int = 10_000) -> list[RequestState]:
         """Step until idle; raises :class:`SchedulerExhaustedError`
         (with queue-depth and budget context) on tick exhaustion."""
+        if max_ticks < 1:
+            raise ValueError(
+                f"max_ticks must be >= 1 (the drain safety bound), "
+                f"got {max_ticks}"
+            )
         out: list[RequestState] = []
         for _ in range(max_ticks):
             if self.idle():
@@ -441,6 +476,10 @@ class RequestScheduler:
             while sent < len(st.generated):
                 yield st.generated[sent]
                 sent += 1
+        if st.status is RequestStatus.FAILED:
+            raise DegradedServiceError(
+                f"request {request.rid} failed: {st.fail_reason}"
+            )
         while sent < len(st.generated):
             yield st.generated[sent]
             sent += 1
@@ -457,6 +496,9 @@ class RequestScheduler:
             expired=c["expired"],
             preempted=c["preempted"],
             resumed=c["resumed"],
+            failed=c["failed"],
+            restarted=c["restarted"],
+            degraded_reason=self.degraded_reason,
             queue_depth=len(self.waiting),
             running=len(self.running),
             max_queue_depth=self._max_queue_depth,
@@ -471,6 +513,63 @@ class RequestScheduler:
                 self._ttft[1] / self._ttft[0] if self._ttft[0] else 0.0
             ),
         )
+
+    # -- fault tolerance (PR 9) ----------------------------------------------
+
+    def restart_in_flight(self, *, clean_before: int = -1, reason: str = "fault") -> int:
+        """Requeue every in-flight request whose state may carry
+        corrupted output after a fault + remap.
+
+        Preemption snapshots taken at or before ``clean_before`` (the
+        health monitor's last probe-clean pool tick) are trusted and
+        resume bit-exactly; everything running now, and every snapshot
+        newer than the watermark, restarts from scratch (cleared output,
+        fresh prefill). ``first_token_tick`` is kept so TTFT is not
+        double-counted. Returns the number of requests reset."""
+        n = 0
+        for slot, st in list(self.running.items()):
+            del self.running[slot]
+            self.pool.release_slot(slot)
+            self._reset(st)
+            self.waiting.append(st)
+            n += 1
+        for st in self.waiting:
+            if st.snapshot is not None and st.snapshot.tick > clean_before:
+                self._reset(st)
+                n += 1
+        if n:
+            self._counts["restarted"] += n
+            self._max_queue_depth = max(self._max_queue_depth, len(self.waiting))
+            obs.event(
+                "request.restart", track="sched", n=n, reason=reason,
+                clean_before=clean_before, tick=self.tick_count,
+            )
+        return n
+
+    def _reset(self, st: RequestState) -> None:
+        """Back to square one: WAITING, no output, no snapshot (the
+        request re-prefills on next admission)."""
+        st.status = RequestStatus.WAITING
+        st.generated.clear()
+        st.committed = 0
+        st.snapshot = None
+
+    def degrade(self, reason: str) -> list[RequestState]:
+        """Graceful degradation: FAIL every in-flight and queued request
+        with a named reason and reject all future submissions. The pool
+        and scheduler objects stay alive — callers observe
+        :class:`DegradedServiceError` per request, never a dead engine."""
+        self.degraded_reason = reason
+        out: list[RequestState] = []
+        for slot, st in list(self.running.items()):
+            del self.running[slot]
+            self.pool.release_slot(slot)
+            out.append(self._terminate(st, RequestStatus.FAILED, reason))
+        for st in list(self.waiting):
+            self.waiting.remove(st)
+            out.append(self._terminate(st, RequestStatus.FAILED, reason))
+        self._async_terminal.extend(out)
+        return out
 
     # -- scheduling internals ------------------------------------------------
 
@@ -500,16 +599,28 @@ class RequestScheduler:
                 out.append(self._terminate(st, RequestStatus.EXPIRED))
         return out
 
-    def _terminate(self, st: RequestState, status: RequestStatus) -> RequestState:
+    def _terminate(
+        self, st: RequestState, status: RequestStatus, reason: str | None = None
+    ) -> RequestState:
         st.status = status
         st.finish_tick = self.tick_count
         st.committed = 0
         st.snapshot = None
-        key = "finished" if status is RequestStatus.FINISHED else "expired"
+        key = {
+            RequestStatus.FINISHED: "finished",
+            RequestStatus.EXPIRED: "expired",
+            RequestStatus.FAILED: "failed",
+        }[status]
+        if status is RequestStatus.FAILED:
+            st.fail_reason = reason
         self._counts[key] += 1
+        event = {
+            "finished": "request.finish",
+            "expired": "request.expire",
+            "failed": "request.fail",
+        }[key]
         obs.event(
-            "request.expire" if key == "expired" else "request.finish",
-            track="sched", rid=st.rid, tick=self.tick_count,
+            event, track="sched", rid=st.rid, tick=self.tick_count,
             n_generated=len(st.generated),
         )
         obs.count(

@@ -7,7 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint import (
+    CheckpointManager,
+    CorruptCheckpointError,
+    restore_tree,
+    save_tree,
+)
 
 
 def _tree(seed=0):
@@ -84,3 +89,41 @@ def test_crash_mid_write_leaves_previous_intact(tmp_path):
     assert mgr.latest_step() == 1
     got, extra = mgr.restore(t)
     assert extra["step"] == 1
+
+
+def test_overwrite_is_atomic_and_updates(tmp_path):
+    """Re-saving the same step swaps snapshots without a window where
+    the path names a partial dir; a stale .old aside (crashed swap) is
+    tolerated, never listed as a step."""
+    path = str(tmp_path / "ck")
+    save_tree(path, _tree(0), {"v": 1})
+    os.makedirs(f"{path}.old-{os.getpid()}")  # stale aside from a crash
+    save_tree(path, _tree(3), {"v": 2})
+    like = _tree(3)
+    got, extra = restore_tree(path, like)
+    assert extra["v"] == 2
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(like["a"]))
+    assert not os.path.exists(f"{path}.old-{os.getpid()}")
+    # a manager-level overwrite: the aside dir never shows up in steps()
+    mgr = CheckpointManager(str(tmp_path / "mgr"))
+    mgr.save(1, _tree(0))
+    mgr.save(1, _tree(1))
+    assert mgr.steps() == [1]
+
+
+def test_corrupt_manifest_named(tmp_path):
+    """Marker present but manifest mangled: CorruptCheckpointError names
+    the path (distinct from FileNotFoundError = no checkpoint)."""
+    d = tmp_path / "ck"
+    save_tree(str(d), _tree())
+    (d / "manifest.json").write_text("{not json")
+    with pytest.raises(CorruptCheckpointError, match="manifest"):
+        restore_tree(str(d), _tree())
+
+
+def test_corrupt_arrays_named(tmp_path):
+    d = tmp_path / "ck"
+    save_tree(str(d), _tree())
+    (d / "arrays.npz").write_bytes(b"\x00" * 16)  # truncated/garbled payload
+    with pytest.raises(CorruptCheckpointError, match="arrays.npz"):
+        restore_tree(str(d), _tree())

@@ -1,0 +1,578 @@
+"""Device fault injection + fault tolerance (PR 9).
+
+The contract under test: a null fault model is bit-identical to the
+plain engine on every backend; planted faults corrupt outputs by the
+exact algebraic delta and are caught by the TacitMap complement-row
+consistency probe; remapping onto spare tiles restores bit-exactness;
+serving degrades gracefully (failed requests, rejected submits) when
+the spare pool runs out — never a dead engine.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler as compiler_lib
+from repro.compiler import HardwareTarget, TargetError
+from repro.configs import get_smoke_config
+from repro.core import bnn
+from repro.core import engine as engine_lib
+from repro.core.crossbar import EPCM_TILE
+from repro.faults import (
+    FaultInjectionError,
+    FaultMap,
+    FaultModel,
+    FaultModelError,
+    FaultyEngine,
+)
+from repro.mapping import (
+    SpareTilesExhaustedError,
+    allocate,
+    remap_plan,
+)
+from repro.models import lm as lm_lib
+from repro.serving import (
+    DegradedServiceError,
+    Request,
+    RequestRejectedError,
+    RequestStatus,
+)
+
+MAX_LEN = 64
+GEN = 6
+TICKS = 500
+
+# 4 physical tiles for a (2*16, 32) cell matrix — small enough that
+# engine-level placement/locate tests are readable
+SMALL_SPEC = dataclasses.replace(EPCM_TILE, rows=16, cols=16)
+
+
+def _signs(rng, *shape):
+    return jnp.asarray(rng.choice([-1.0, 1.0], shape).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, (n,), dtype=np.int32)
+               for n in (5, 9, 7)]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def tiled_clean(model):
+    """The fault-tolerant serving target, compiled fault-free, plus the
+    per-request solo references every exactness assertion compares to."""
+    cfg, params, prompts = model
+    cm = compiler_lib.compile(cfg, params, HardwareTarget(
+        engine="tiled", mapping_policy="tacitmap", spare_tiles=3,
+    ))
+    solo = {}
+    for i, p in enumerate(prompts):
+        se = cm.serve(max_batch=1, max_len=MAX_LEN)
+        st = se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN))
+        se.drain(TICKS)
+        solo[i] = tuple(st.generated)
+    return cm, solo
+
+
+def _compile_faulty(model, fault_model, *, spare_tiles=3, engine="tiled"):
+    cfg, params, _ = model
+    return compiler_lib.compile(cfg, params, HardwareTarget(
+        engine=engine, mapping_policy="tacitmap",
+        spare_tiles=spare_tiles, fault_model=fault_model,
+    ))
+
+
+def _resolved_tiles(cm):
+    """Physical tiles the FaultyEngine actually executes: placements
+    resolve BY SHAPE (first matching instance), so failures planted for
+    tests must land on these."""
+    return sorted({
+        t for pw in cm._fault_artifacts()
+        for *_, t in cm.engine._placement_blocks(pw.m, pw.n)
+    })
+
+
+class TestFaultModel:
+    @pytest.mark.parametrize("bad", [
+        dict(seed=-1),
+        dict(stuck_set_rate=-0.1),
+        dict(stuck_set_rate=1.5),
+        dict(stuck_set_rate=0.6, stuck_reset_rate=0.6),
+        dict(drift_rate=-1e-3),
+        dict(dead_lanes=(-1,)),
+        dict(failed_tiles=(-2,)),
+    ])
+    def test_validation(self, bad):
+        with pytest.raises(FaultModelError):
+            FaultModel(**bad).validate()
+
+    def test_null_and_pristine_flags(self):
+        assert FaultModel().is_null
+        fm = FaultModel(dead_lanes=(0,))
+        assert fm.cell_pristine and not fm.is_null  # capacity, not values
+        assert not FaultModel(failed_tiles=(1,)).cell_pristine
+
+    def test_deterministic_per_tile(self):
+        fm = FaultModel(seed=7, stuck_set_rate=0.1, stuck_reset_rate=0.1)
+        s1, r1 = fm.tile_cell_masks(3, 32, 32)
+        s2, r2 = fm.tile_cell_masks(3, 32, 32)
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(r1, r2)
+        s_other, _ = fm.tile_cell_masks(4, 32, 32)
+        assert not np.array_equal(s1, s_other)
+        # SET wins ties: a cell is never stuck both ways
+        assert not (s1 & r1).any()
+
+    def test_drift_is_epoch_monotone(self):
+        fm = FaultModel(seed=1, stuck_reset_rate=0.05, drift_rate=0.2)
+        fracs = [fm.reset_fraction(e) for e in range(5)]
+        assert fracs == sorted(fracs) and fracs[0] == 0.05
+        prev = np.zeros((64, 64), bool)
+        for epoch in range(4):
+            _, reset = fm.tile_cell_masks(0, 64, 64, epoch=epoch)
+            # a cell stuck at epoch e stays stuck at every later epoch
+            assert (prev <= reset).all()
+            prev = reset
+
+    def test_failed_tile_reads_reset_everywhere(self):
+        fm = FaultModel(failed_tiles=(2,))
+        s, r = fm.tile_cell_masks(2, 8, 8)
+        assert not s.any() and r.all()
+
+    def test_fault_map_truthiness_and_union(self):
+        assert not FaultMap()
+        assert FaultMap(tiles=(1,))
+        u = FaultMap(tiles=(1,)).union(FaultMap(lanes=(0,)))
+        assert u.tiles == {1} and u.lanes == {0}
+
+
+class TestFaultyEngineCore:
+    def test_wrap_guards(self):
+        base = engine_lib.get_engine("tacitmap")
+        with pytest.raises(FaultInjectionError):
+            FaultyEngine(FaultyEngine(base, FaultModel()), FaultModel())
+
+    @pytest.mark.parametrize("name", ["tacitmap", "wdm", "packed",
+                                      "custbinarymap"])
+    def test_null_model_bit_identical(self, name):
+        """Zero-fault wrapping is a guaranteed no-op on every backend —
+        including packed, whose delta derives from raw signs at prepare
+        time (bit-packed data has no cell matrix to read back)."""
+        rng = np.random.default_rng(0)
+        w = _signs(rng, 16, 24)
+        a = _signs(rng, 16)
+        g = _signs(rng, 2, 4, 16)  # (G, K, m) group batches
+        plain = engine_lib.get_engine(name)
+        faulty = FaultyEngine(engine_lib.get_engine(name), FaultModel())
+        np.testing.assert_array_equal(
+            np.asarray(plain.binary_vmm(a, plain.prepare(w))),
+            np.asarray(faulty.binary_vmm(a, faulty.prepare(w))),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(plain.binary_mmm(g, plain.prepare(w))),
+            np.asarray(faulty.binary_mmm(g, faulty.prepare(w))),
+        )
+
+    def test_corruption_is_the_exact_algebraic_delta(self):
+        """out_faulty == out_clean + 2 * (complement_drive @ D) with
+        D = SET*(1-C) - RESET*C assembled independently here."""
+        rng = np.random.default_rng(1)
+        m, n = 16, 32
+        w = _signs(rng, m, n)
+        a = _signs(rng, m)
+        fm = FaultModel(seed=5, stuck_set_rate=0.05, stuck_reset_rate=0.05)
+        plain = engine_lib.get_engine("tacitmap", SMALL_SPEC)
+        faulty = FaultyEngine(engine_lib.get_engine("tacitmap", SMALL_SPEC), fm)
+
+        out_clean = np.asarray(plain.binary_vmm(a, plain.prepare(w)))
+        out_faulty = np.asarray(faulty.binary_vmm(a, faulty.prepare(w)))
+
+        # assemble D independently: same per-tile masks, layer-local grid
+        set_m = np.zeros((2 * m, n), bool)
+        reset_m = np.zeros((2 * m, n), bool)
+        R, C = SMALL_SPEC.rows, SMALL_SPEC.cols
+        for rb, cb, ru, cu, tile in faulty._placement_blocks(m, n):
+            s, r = fm.tile_cell_masks(tile, R, C)
+            set_m[rb * R:rb * R + ru, cb * C:cb * C + cu] |= s[:ru, :cu]
+            reset_m[rb * R:rb * R + ru, cb * C:cb * C + cu] |= r[:ru, :cu]
+        prog = np.asarray(_cells_from_signs_np(w))
+        d = set_m * (1.0 - prog) - reset_m * prog
+        drive = np.asarray(bnn.concat_complement_input(bnn.signs_to_bits(a)))
+        expected = out_clean + 2.0 * (drive.astype(np.float64) @ d)
+        np.testing.assert_allclose(out_faulty, expected, rtol=0, atol=1e-5)
+
+    def test_probe_cheap_equals_execute(self):
+        rng = np.random.default_rng(2)
+        w = _signs(rng, 16, 32)
+        fm = FaultModel(seed=3, stuck_set_rate=0.03, stuck_reset_rate=0.03)
+        eng = FaultyEngine(engine_lib.get_engine("tacitmap", SMALL_SPEC), fm)
+        pw = eng.prepare(w)
+        cheap = eng.consistency_probe(pw)
+        honest = eng.consistency_probe(pw, execute=True)
+        np.testing.assert_array_equal(cheap, honest)
+        assert cheap.max() > 0
+
+    def test_probe_silent_when_pristine(self):
+        rng = np.random.default_rng(2)
+        w = _signs(rng, 16, 32)
+        eng = FaultyEngine(engine_lib.get_engine("tacitmap", SMALL_SPEC),
+                           FaultModel())
+        pw = eng.prepare(w)
+        assert eng.consistency_probe(pw).max() == 0.0
+        assert eng.consistency_probe(pw, execute=True).max() == 0.0
+        assert eng.locate(pw) == frozenset()
+
+    def test_locate_names_the_failed_tile(self):
+        rng = np.random.default_rng(3)
+        w = _signs(rng, 16, 32)  # (32, 32) cells -> 4 tiles under SMALL_SPEC
+        eng = FaultyEngine(engine_lib.get_engine("tacitmap", SMALL_SPEC),
+                           FaultModel())
+        assert eng.pristine
+        eng.fail_tile(3)
+        assert not eng.pristine
+        pw = eng.prepare(w)
+        assert eng.locate(pw) == frozenset({3})
+        # refresh after repair-by-remap state change recomputes the delta
+        eng2 = eng.rebind(engine_lib.get_engine("tacitmap", SMALL_SPEC))
+        assert eng2.failed_tiles() == frozenset({3})
+
+    def test_drift_corrupts_and_probe_fires(self):
+        rng = np.random.default_rng(4)
+        w = _signs(rng, 16, 32)
+        fm = FaultModel(seed=9, drift_rate=0.5)
+        eng = FaultyEngine(engine_lib.get_engine("tacitmap", SMALL_SPEC), fm)
+        with pytest.raises(ValueError):
+            eng.advance_drift(-1)
+        eng.advance_drift(3)
+        pw = eng.prepare(w)
+        assert eng.consistency_probe(pw).max() > 0
+
+    def test_dead_lanes_shrink_effective_k(self):
+        eng = FaultyEngine(engine_lib.get_engine("wdm"), FaultModel())
+        k0 = eng.inner.preferred_group_size()
+        assert k0 > 1 and eng.effective_group_cap() == k0
+        eng.fail_lane(0)
+        eng.fail_lane(2)
+        assert eng.effective_group_cap() == k0 - 2
+        assert eng.preferred_group_size() == k0 - 2
+
+
+def _cells_from_signs_np(w):
+    b = bnn.signs_to_bits(w)
+    return np.asarray(jnp.concatenate([b, 1.0 - b], axis=-2))
+
+
+class TestAllocatorFaultAwareness:
+    def test_spares_and_avoid_holes(self, model):
+        cfg, _, _ = model
+        plan = allocate(cfg, policy="tacitmap", tile_budget=8,
+                        spare_tiles=2, avoid_tiles=(0, 3))
+        data_tiles = {b.tile for lp in plan.layers for b in lp.blocks}
+        assert 0 not in data_tiles and 3 not in data_tiles
+        assert len(plan.spares) == 2
+        assert not (set(plan.spares) & data_tiles)
+        assert 0 not in plan.spares and 3 not in plan.spares
+        assert plan.avoid_tiles == (0, 3)
+
+    def test_allocate_validation(self, model):
+        cfg, _, _ = model
+        with pytest.raises(ValueError):
+            allocate(cfg, spare_tiles=-1)
+        with pytest.raises(ValueError):
+            allocate(cfg, avoid_tiles=(-3,))
+
+    def test_remap_moves_only_displaced_blocks(self, model):
+        cfg, _, _ = model
+        plan = allocate(cfg, policy="tacitmap", tile_budget=8, spare_tiles=2)
+        victim = next(b.tile for lp in plan.layers for b in lp.blocks)
+        new_plan, delta = remap_plan(plan, [victim])
+        moved = {(mv.layer, mv.row_block, mv.col_block) for mv in delta.moves}
+        assert all(mv.src == victim and mv.dst in plan.spares
+                   for mv in delta.moves)
+        for lp_old, lp_new in zip(plan.layers, new_plan.layers):
+            for b_old, b_new in zip(lp_old.blocks, lp_new.blocks):
+                key = (lp_old.name, b_old.row_block, b_old.col_block)
+                if key in moved:
+                    assert b_old.tile == victim and b_new.tile != victim
+                else:
+                    assert b_old == b_new  # untouched blocks keep their cells
+        assert victim in new_plan.avoid_tiles
+        assert victim not in new_plan.spares
+        assert delta.cost.cells == sum(mv.cells for mv in delta.moves)
+        assert delta.cost.energy_pj > 0 and delta.cost.time_ns > 0
+
+    def test_remap_empty_failure_set_is_free(self, model):
+        cfg, _, _ = model
+        plan = allocate(cfg, policy="tacitmap", tile_budget=8, spare_tiles=1)
+        same, delta = remap_plan(plan, [])
+        assert same is plan and delta.moves == () and delta.cost.cells == 0
+
+    def test_remap_exhaustion_and_bist_veto(self, model):
+        cfg, _, _ = model
+        plan = allocate(cfg, policy="tacitmap", tile_budget=8, spare_tiles=0)
+        victim = next(b.tile for lp in plan.layers for b in lp.blocks)
+        with pytest.raises(SpareTilesExhaustedError):
+            remap_plan(plan, [victim])
+        plan2 = allocate(cfg, policy="tacitmap", tile_budget=8, spare_tiles=2)
+        # a BIST predicate that condemns every spare exhausts the pool too
+        with pytest.raises(SpareTilesExhaustedError):
+            remap_plan(plan2, [victim], tile_ok=lambda t: False)
+
+
+class TestTargetValidation:
+    def test_negative_spares(self, model):
+        with pytest.raises(TargetError):
+            HardwareTarget(engine="tiled", mapping_policy="tacitmap",
+                           spare_tiles=-1).validate()
+
+    def test_invalid_fault_model_is_target_error(self):
+        with pytest.raises(TargetError):
+            HardwareTarget(engine="tacitmap",
+                           fault_model=FaultModel(seed=-1)).validate()
+
+    def test_reference_engine_rejects_fault_model(self):
+        with pytest.raises(TargetError):
+            HardwareTarget(engine="reference",
+                           fault_model=FaultModel()).validate()
+
+    def test_describe_mentions_faults_and_spares(self):
+        t = HardwareTarget(engine="tiled", mapping_policy="tacitmap",
+                           spare_tiles=2,
+                           fault_model=FaultModel(failed_tiles=(1,)))
+        d = t.describe()
+        assert "spares=2" in d and "failed_tiles=[1]" in d
+
+
+class TestCompiledRemap:
+    def test_null_injection_compiled_bit_identical(self, model, tiled_clean):
+        cfg, params, prompts = model
+        cm_clean, _ = tiled_clean
+        cm = _compile_faulty(model, FaultModel())
+        toks = np.concatenate([prompts[0], prompts[1]])[None, :].astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(cm_clean.prefill(toks)[0]),
+            np.asarray(cm.prefill(toks)[0]),
+        )
+
+    def test_remap_round_trip_restores_bit_exactness(self, model, tiled_clean):
+        cfg, params, prompts = model
+        cm_clean, _ = tiled_clean
+        cm = _compile_faulty(model, FaultModel())
+        toks = prompts[0][None, :].astype(np.int32)
+        ref = np.asarray(cm_clean.prefill(toks)[0])
+
+        victim = _resolved_tiles(cm)[0]
+        cm.engine.fail_tile(victim)
+        cm.refresh_faults()
+        assert not np.array_equal(np.asarray(cm.prefill(toks)[0]), ref)
+
+        sweep = cm.scan_faults()
+        assert sweep.tiles == {victim}
+        report = cm.remap(sweep)
+        assert len(report.moves) >= 1
+        assert all(mv.src == victim for mv in report.moves)
+        assert report.cost.cells > 0
+        np.testing.assert_array_equal(np.asarray(cm.prefill(toks)[0]), ref)
+        assert not cm.scan_faults().tiles  # post-remap sweep is clean
+
+    def test_remap_without_plan_or_wrapper_raises(self, model, tiled_clean):
+        cm_clean, _ = tiled_clean
+        with pytest.raises(TargetError):
+            cm_clean.remap(FaultMap(tiles=(0,)))  # no FaultyEngine bound
+        cfg, params, _ = model
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(
+            engine="tacitmap", fault_model=FaultModel()))
+        with pytest.raises(TargetError):
+            cm.remap(FaultMap(tiles=(0,)))  # wrapper but no mapping plan
+
+    def test_compiled_group_size_respects_dead_lanes(self, model):
+        cfg, params, _ = model
+        fm = FaultModel(dead_lanes=(0, 1))
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(
+            engine="wdm", fault_model=fm))
+        cm_plain = compiler_lib.compile(cfg, params,
+                                        HardwareTarget(engine="wdm"))
+        k_plain = cm_plain.group_size_for(32)
+        assert cm.group_size_for(32) == k_plain - 2
+
+
+class TestServingFaultTolerance:
+    def test_mid_serve_failure_remap_solo_exact(self, model, tiled_clean):
+        """The headline gate: a tile dies mid-serve, the health monitor
+        detects + remaps + restarts, every generation stays solo-exact."""
+        cfg, params, prompts = model
+        _, solo = tiled_clean
+        cm = _compile_faulty(model, FaultModel())
+        victim = _resolved_tiles(cm)[0]
+        se = cm.serve(max_batch=len(prompts), max_len=MAX_LEN)
+        assert se.health is not None
+        sts = [se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN))
+               for i, p in enumerate(prompts)]
+        for tick in range(TICKS):
+            if tick == 2:
+                cm.engine.fail_tile(victim)
+                cm.refresh_faults()
+                se._rebind()
+            se.step()
+            if se.idle():
+                break
+        assert se.health.remaps == 1 and not se.health.degraded
+        assert victim in se.health.quarantined
+        assert se.stats().scheduler.restarted >= 1
+        for st in sts:
+            assert st.status is RequestStatus.FINISHED
+            assert tuple(st.generated) == solo[st.rid]
+
+    def test_preempted_during_remap_restores_bit_exact(self, model,
+                                                       tiled_clean):
+        """Satellite: a request preempted (priority eviction, snapshot
+        taken) while the fault->remap window is open must come back
+        bit-exact — post-fault snapshots are discarded by the
+        clean-tick watermark, pre-fault ones restore."""
+        cfg, params, prompts = model
+        _, solo = tiled_clean
+        cm = _compile_faulty(model, FaultModel())
+        victim = _resolved_tiles(cm)[0]
+        se = cm.serve(max_batch=2, max_len=MAX_LEN)
+        sts = [se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN,
+                                 priority=0))
+               for i, p in enumerate(prompts[:2])]
+        for tick in range(TICKS):
+            if tick == 1:
+                # high-priority arrival evicts a running low-priority
+                # request: its snapshot is taken INSIDE the fault window
+                sts.append(se.submit(Request(
+                    rid=2, prompt=prompts[2], max_new_tokens=GEN,
+                    priority=5)))
+                cm.engine.fail_tile(victim)
+                cm.refresh_faults()
+                se._rebind()
+            se.step()
+            if se.idle():
+                break
+        assert se.health.remaps == 1 and not se.health.degraded
+        for st in sts:
+            assert st.status is RequestStatus.FINISHED
+            assert tuple(st.generated) == solo[st.rid]
+
+    def test_expired_partial_output_is_strict_solo_prefix(self, model,
+                                                          tiled_clean):
+        """Satellite: a request whose deadline passes after a
+        fault-induced restart keeps a partial output that is a STRICT
+        prefix of the solo generation — restarts never leak corrupt
+        tokens into what the client saw."""
+        cfg, params, prompts = model
+        _, solo = tiled_clean
+        cm = _compile_faulty(model, FaultModel())
+        victim = _resolved_tiles(cm)[0]
+        se = cm.serve(max_batch=1, max_len=MAX_LEN)
+        st = se.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=GEN,
+                               deadline_ticks=8))
+        for tick in range(TICKS):
+            if tick == 2:
+                cm.engine.fail_tile(victim)
+                cm.refresh_faults()
+                se._rebind()
+            se.step()
+            if se.idle():
+                break
+        assert st.status is RequestStatus.EXPIRED
+        got = tuple(st.generated)
+        assert 0 < len(got) < len(solo[0])
+        assert got == solo[0][:len(got)]
+
+    def test_spare_exhaustion_degrades_gracefully(self, model):
+        cfg, params, prompts = model
+        cm = _compile_faulty(model, FaultModel(), spare_tiles=0)
+        victim = _resolved_tiles(cm)[0]
+        se = cm.serve(max_batch=2, max_len=MAX_LEN)
+        st = se.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12))
+        se.step()
+        cm.engine.fail_tile(victim)
+        cm.refresh_faults()
+        se._rebind()
+        for _ in range(20):
+            se.step()
+            if se.health.degraded:
+                break
+        assert se.health.degraded
+        assert st.status is RequestStatus.FAILED
+        assert st.fail_reason and "spare" in st.fail_reason.lower()
+        # new submissions are rejected with the degradation reason
+        st2 = se.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=4))
+        assert st2.status is RequestStatus.REJECTED
+        with pytest.raises(RequestRejectedError, match="degraded"):
+            list(se.stream(Request(rid=2, prompt=prompts[2],
+                                   max_new_tokens=4)))
+
+    def test_stream_raises_degraded_service_error(self, model):
+        """An in-flight STREAMED request whose service degrades
+        surfaces DegradedServiceError to the consuming client."""
+        cfg, params, prompts = model
+        cm = _compile_faulty(model, FaultModel(), spare_tiles=0)
+        victim = _resolved_tiles(cm)[0]
+        se = cm.serve(max_batch=1, max_len=MAX_LEN)
+        cm.engine.fail_tile(victim)
+        cm.refresh_faults()
+        se._rebind()
+        with pytest.raises(DegradedServiceError, match="failed"):
+            # health check fires a few ticks in; the remap fails (no
+            # spares) and the request is terminated FAILED mid-stream
+            list(se.stream(Request(rid=0, prompt=prompts[0],
+                                   max_new_tokens=24)))
+
+    def test_dead_lane_k_shrink_is_bit_exact(self, model):
+        """Dead WDM lanes are a capacity loss, never a correctness
+        loss: generations under a shrunken K match the plain engine."""
+        cfg, params, prompts = model
+        cm_plain = compiler_lib.compile(cfg, params,
+                                        HardwareTarget(engine="wdm"))
+        solo = {}
+        for i, p in enumerate(prompts):
+            se = cm_plain.serve(max_batch=1, max_len=MAX_LEN)
+            st = se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN))
+            se.drain(TICKS)
+            solo[i] = tuple(st.generated)
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(
+            engine="wdm", fault_model=FaultModel(dead_lanes=(0, 3))))
+        se = cm.serve(max_batch=len(prompts), max_len=MAX_LEN)
+        sts = [se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN))
+               for i, p in enumerate(prompts)]
+        se.drain(TICKS)
+        for st in sts:
+            assert tuple(st.generated) == solo[st.rid]
+
+    def test_runtime_lane_death_shrinks_k(self, model, tiled_clean):
+        """A lane dying mid-serve shrinks the K-group via the monitor
+        (no remap needed) and the pool keeps draining bit-exactly."""
+        cfg, params, prompts = model
+        cm = compiler_lib.compile(cfg, params, HardwareTarget(
+            engine="wdm", fault_model=FaultModel()))
+        # max_batch >= preferred K so group_k isn't batch-clamped and
+        # the lane-death shrink is observable
+        se = cm.serve(max_batch=16, max_len=MAX_LEN)
+        k0 = se.group_k
+        sts = [se.submit(Request(rid=i, prompt=p, max_new_tokens=GEN))
+               for i, p in enumerate(prompts)]
+        for tick in range(TICKS):
+            if tick == 2:
+                cm.engine.fail_lane(1)
+            se.step()
+            if se.idle():
+                break
+        assert se.group_k == k0 - 1
+        assert not se.health.degraded
+        assert all(st.status is RequestStatus.FINISHED for st in sts)
+
+    def test_drain_max_ticks_validation(self, model, tiled_clean):
+        cm_clean, _ = tiled_clean
+        se = cm_clean.serve(max_batch=1, max_len=MAX_LEN)
+        with pytest.raises(ValueError, match="max_ticks"):
+            se.drain(0)
