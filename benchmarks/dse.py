@@ -75,6 +75,39 @@ def explore(smoke: bool, policies=None, budgets=None) -> list[dict]:
     return rows
 
 
+def fleet_axis(smoke: bool, best: dict) -> list[dict]:
+    """The replica-count axis (PR 10): re-price the pareto front's best
+    target across fleet sizes through ``costmodel.fleet_price`` — the
+    throughput-vs-area trade replication buys on program-once CIM."""
+    from repro import compiler as compiler_lib
+    from repro.configs import get_config
+    from repro.core import costmodel
+    from repro.core.crossbar import OPCM_TILE
+    from repro.compiler import HardwareTarget
+
+    cfg = get_config(ARCH)
+    spec = dataclasses.replace(OPCM_TILE, wdm_k=best["k"])
+    target = HardwareTarget(
+        engine="tiled", spec=spec, mapping_policy=best["policy"],
+        tile_budget=best["tile_budget"],
+    )
+    base = compiler_lib.compile(cfg, None, target).price()
+    counts = (1, 2) if smoke else (1, 2, 4, 8)
+    rows = []
+    for n in counts:
+        fp = costmodel.fleet_price(base, n)
+        rows.append({
+            "replicas": n,
+            "tiles_total": fp.tiles_total,
+            "program_uj": fp.programming_uj,
+            "program_us": fp.programming_us,
+            "tick_pj": fp.tick_energy_pj,
+            "fleet_tok_s": fp.fleet_tokens_per_s,
+            "break_even_ticks": fp.break_even_ticks,
+        })
+    return rows
+
+
 def pareto(rows, keys=("latency_us", "n_tiles")):
     """Non-dominated front — by default latency vs area (tiles)."""
 
@@ -129,12 +162,35 @@ def run(smoke: bool = False, policies=None, budgets=None) -> tuple[int, dict]:
         all(lat[b] >= lat[None] - 1e-9 for b in lat if b is not None)
         for lat in by_k.values() if None in lat
     )
-    ok = enough and k_monotone and budget_costs and bool(front)
+    # the replica-count axis: the front's fastest target re-priced
+    # across fleet sizes (PR 10 fleet serving)
+    fleet = fleet_axis(smoke, front[0]) if front else []
+    if fleet:
+        print(f"\nfleet replica axis (best front target: "
+              f"{front[0]['policy']}, K={front[0]['k']}):")
+        print(f"{'N':>3s} {'tiles':>7s} {'prog_uJ':>8s} {'prog_us':>8s} "
+              f"{'fleet tok/s':>12s}")
+        for r in fleet:
+            print(f"{r['replicas']:3d} {r['tiles_total']:7d} "
+                  f"{r['program_uj']:8.2f} {r['program_us']:8.1f} "
+                  f"{r['fleet_tok_s']:12.2e}")
+    base_f = fleet[0] if fleet else None
+    fleet_linear = all(
+        r["tiles_total"] == r["replicas"] * base_f["tiles_total"]
+        and abs(r["fleet_tok_s"] - r["replicas"] * base_f["fleet_tok_s"]) < 1e-3
+        and r["program_us"] == base_f["program_us"]
+        for r in fleet
+    ) if fleet else False
+
+    ok = enough and k_monotone and budget_costs and bool(front) and fleet_linear
     print(f"\n[{'PASS' if enough else 'FAIL'}] >= {min_points} priced target "
           f"points ({len(rows)})")
     print(f"[{'PASS' if k_monotone else 'FAIL'}] latency monotone non-increasing in K")
     print(f"[{'PASS' if budget_costs else 'FAIL'}] tile budgets never beat dedicated tiles")
-    payload = {"arch": ARCH, "targets": rows, "pareto": front, "ok": ok}
+    print(f"[{'PASS' if fleet_linear else 'FAIL'}] fleet pricing linear in "
+          f"replicas (tiles, throughput) with flat programming wall-clock")
+    payload = {"arch": ARCH, "targets": rows, "pareto": front,
+               "fleet": fleet, "ok": ok}
     return (0 if ok else 1), payload
 
 

@@ -1,0 +1,337 @@
+"""Fleet-serving gate — N replicas behind the prefix-affinity router
+(``BENCH_fleet.json``).
+
+The PR 10 fleet layer (``repro.fleet``) must be semantically invisible
+and measurably useful. This section drives both claims the way the
+scheduler section drives PR 7:
+
+* **Gate (a) — routed == solo**: a shared-prefix request mix through
+  every routing policy x replica count x engine; every FINISHED
+  generation must be byte-identical to its solo single-slot reference.
+  Routing decides *where* a request runs and *how much* prefix it
+  skips — never *what* it generates.
+* **Gate (b) — prefix routing earns its index**: on a workload where
+  half the prompts share a block-aligned prefix, the ``prefix`` policy
+  must score a strictly higher hit rate than ``round-robin`` (which
+  must score zero) and prefill strictly fewer prompt tokens — the
+  grafted tokens are prefill work the fleet measurably skipped.
+* **Gate (c) — failover drains clean**: a two-replica fleet where
+  replica 0 injects a mid-serve tile failure with zero spare tiles
+  (tolerance out of moves -> degrade). The pool must fail the lost
+  requests over to the healthy replica and drain with ZERO fleet-wide
+  FAILED requests, still solo-exact.
+* **Modeled**: ``costmodel.fleet_price`` across replica counts —
+  tiles/write energy linear in N, wall-clock programming flat, fleet
+  throughput linear in N (replication is an area trade on
+  program-once CIM).
+
+    PYTHONPATH=src python -m benchmarks.fleet [--smoke]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+TICK_CAP = 2_000   # deadlock gate: no smoke run needs remotely this many
+BLOCK = 4          # router hash-block width (smoke prompts are short)
+
+
+def _bench_model():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_lib
+
+    cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"), quant="bnn")
+    params = lm_lib.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _shared_prefix_prompts(n, *, shared_len=2 * BLOCK):
+    """Half the prompts share one block-aligned prefix with distinct
+    tails; the rest are unrelated — the prefix policy has something to
+    find and round-robin has nothing to lose."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, 1000, (shared_len,), dtype=np.int32)
+    prompts = []
+    for i in range(n):
+        if i % 2 == 0:
+            tail = rng.integers(1, 1000, (2 + i % 3,), dtype=np.int32)
+            prompts.append(np.concatenate([shared, tail]))
+        else:
+            prompts.append(rng.integers(1, 1000, (5,), dtype=np.int32))
+    return prompts
+
+
+def _solo_refs(cm, prompts, gen, max_len):
+    """Each request alone in a 1-slot pool: the byte-exactness oracle."""
+    from repro.serving import Request
+
+    refs = {}
+    for i, p in enumerate(prompts):
+        se = cm.serve(max_batch=1, max_len=max_len)
+        st = se.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
+        se.drain()
+        refs[i] = tuple(st.generated)
+    return refs
+
+
+def _drive(fleet, prompts, refs, *, gen):
+    """Staggered arrival (one submit per fleet tick, so the prefix
+    library is live for later arrivals), then drain."""
+    from repro.serving import Request, RequestStatus
+
+    states = []
+    for i, p in enumerate(prompts):
+        states.append(fleet.submit(Request(rid=i, prompt=p,
+                                           max_new_tokens=gen)))
+        fleet.step()
+    fleet.drain(max_ticks=TICK_CAP)
+    exact = all(
+        st.status is RequestStatus.FINISHED
+        and tuple(st.generated) == refs[st.request.rid]
+        for st in states
+    )
+    return states, exact
+
+
+def routed_vs_solo(engines, replica_counts, policies, *, n_requests, gen):
+    """Gate (a) + (b): the policy x replicas x engine grid, solo-exact
+    everywhere, with the prefix policy's hit/graft ledger per row."""
+    from repro import compiler as compiler_lib
+    from repro.fleet import FleetEngine, Replica
+
+    cfg, params = _bench_model()
+    prompts = _shared_prefix_prompts(n_requests)
+    max_len = max(len(p) for p in prompts) + gen + 2
+
+    rows = []
+    for engine in engines:
+        cm = compiler_lib.compile(
+            cfg, params, compiler_lib.HardwareTarget(engine=engine)
+        )
+        refs = _solo_refs(cm, prompts, gen, max_len)
+        for n in replica_counts:
+            for policy in policies:
+                # clean replicas can share one CompiledModel: serving
+                # state lives on each ServingEngine, and sharing the jit
+                # caches keeps the grid affordable
+                fleet = FleetEngine(
+                    [Replica(r, cm, max_batch=2, max_len=max_len)
+                     for r in range(n)],
+                    routing=policy, block_size=BLOCK,
+                )
+                states, exact = _drive(fleet, prompts, refs, gen=gen)
+                s = fleet.stats()
+                rows.append({
+                    "engine": engine,
+                    "replicas": n,
+                    "policy": policy,
+                    "exact": exact,
+                    "finished": s.finished,
+                    "failed": s.failed,
+                    "prefix_hits": s.prefix_hits,
+                    "hit_rate": s.prefix_hit_rate,
+                    "grafted_tokens": s.grafted_tokens,
+                    "prefill_tokens": s.prefill_tokens,
+                    "ticks": s.ticks,
+                })
+    return rows
+
+
+def failover_drain(*, n_requests, gen=16, fail_after=2):
+    """Gate (c): replica 0 (fault-injected, zero spares) degrades
+    mid-drain; the fleet must finish everything on replica 1, exact.
+
+    ``gen`` stays long enough that the health monitor's sampled sweep
+    (every ``check_interval`` ticks) fires AFTER the planted failure
+    while requests are still in flight — a too-short run would finish
+    before detection and prove nothing."""
+    from repro import compiler as compiler_lib
+    from repro.compiler import HardwareTarget
+    from repro.faults import FaultModel
+    from repro.fleet import FleetEngine, Replica
+
+    cfg, params = _bench_model()
+    prompts = _shared_prefix_prompts(n_requests)
+    max_len = max(len(p) for p in prompts) + gen + 2
+    clean = HardwareTarget(
+        engine="tiled", mapping_policy="tacitmap", spare_tiles=0
+    )
+    cm_ref = compiler_lib.compile(cfg, params, clean)
+    refs = _solo_refs(cm_ref, prompts, gen, max_len)
+
+    cm0 = compiler_lib.compile(
+        cfg, params, dataclasses.replace(clean, fault_model=FaultModel())
+    )
+    r0 = Replica(0, cm0, max_batch=n_requests, max_len=max_len)
+    r1 = Replica(1, cm_ref, max_batch=n_requests, max_len=max_len)
+    fleet = FleetEngine([r0, r1], routing="least-loaded")
+
+    from repro.serving import Request, RequestStatus
+
+    states = [
+        fleet.submit(Request(rid=i, prompt=p, max_new_tokens=gen))
+        for i, p in enumerate(prompts)
+    ]
+    resolved = sorted({
+        t for pw in cm0._fault_artifacts()
+        for *_, t in cm0.engine._placement_blocks(pw.m, pw.n)
+    })
+    ticks = 0
+    while not fleet.idle() and ticks <= TICK_CAP:
+        if ticks == fail_after:
+            cm0.engine.fail_tile(resolved[0])
+            cm0.refresh_faults()
+            r0.serving._rebind()
+        fleet.step()
+        ticks += 1
+
+    s = fleet.stats()
+    exact = all(
+        st.status is RequestStatus.FINISHED
+        and tuple(st.generated) == refs[st.request.rid]
+        for st in states
+    )
+    return {
+        "victim_tile": resolved[0],
+        "failed_at_tick": fail_after,
+        "ticks": ticks,
+        "degraded_replica": 0,
+        "degraded_reason": r0.degraded_reason,
+        "failovers": s.failovers,
+        "salvaged": s.salvaged,
+        "finished": s.finished,
+        "failed": s.failed,
+        "healthy_replicas": s.healthy_replicas,
+        "bit_exact_vs_solo": exact,
+        "drained": ticks <= TICK_CAP,
+    }
+
+
+def modeled_fleet_price(replica_counts):
+    """Replication pricing through the costmodel seam."""
+    from repro import compiler as compiler_lib
+    from repro.core import costmodel
+
+    cfg, params = _bench_model()
+    cm = compiler_lib.compile(
+        cfg, params,
+        compiler_lib.HardwareTarget(engine="tiled", mapping_policy="tacitmap"),
+    )
+    base = cm.price(n_active=4)
+    return [costmodel.fleet_price(base, n, n_active=4)
+            for n in replica_counts]
+
+
+def run(smoke: bool = False) -> tuple[int, dict]:
+    from repro.fleet import ROUTING_POLICIES
+
+    if smoke:
+        engines = ("reference", "packed")
+        replica_counts = (2,)
+        sizes = dict(n_requests=6, gen=4)
+        priced = (1, 2, 4)
+    else:
+        engines = ("reference", "wdm", "packed", "tiled")
+        replica_counts = (2, 3)
+        sizes = dict(n_requests=10, gen=6)
+        priced = (1, 2, 4, 8)
+
+    rows = routed_vs_solo(engines, replica_counts, ROUTING_POLICIES, **sizes)
+
+    print("\n== fleet routed-vs-solo grid (smoke LM, shared-prefix "
+          f"workload, {sizes['n_requests']} requests, gen={sizes['gen']}) ==")
+    print(f"{'engine':>10s} {'N':>3s} {'policy':>13s} {'fin':>4s} "
+          f"{'hits':>5s} {'rate':>6s} {'grafted':>8s} {'prefilled':>9s} "
+          f"{'exact':>6s}")
+    for r in rows:
+        print(f"{r['engine']:>10s} {r['replicas']:3d} {r['policy']:>13s} "
+              f"{r['finished']:4d} {r['prefix_hits']:5d} "
+              f"{r['hit_rate']:6.0%} {r['grafted_tokens']:8d} "
+              f"{r['prefill_tokens']:9d} {str(r['exact']):>6s}")
+
+    exact = all(r["exact"] for r in rows)
+    # gate (b), per engine x replica count: prefix must strictly beat
+    # round-robin on hit rate AND on prompt tokens actually prefilled
+    prefix_wins = True
+    for engine in engines:
+        for n in replica_counts:
+            by = {
+                r["policy"]: r for r in rows
+                if r["engine"] == engine and r["replicas"] == n
+            }
+            pfx, rr = by["prefix"], by["round-robin"]
+            if not (pfx["hit_rate"] > rr["hit_rate"]
+                    and pfx["prefill_tokens"] < rr["prefill_tokens"]):
+                prefix_wins = False
+    print(f"\nrouted == solo (every policy x replicas x engine): {exact}")
+    print("prefix beats round-robin (hit rate strictly higher, prefill "
+          f"tokens strictly lower) on every grid point: {prefix_wins}")
+
+    fo = failover_drain(n_requests=sizes["n_requests"])
+    print("\n== mid-serve replica degrade -> failover ==")
+    print(f"tile {fo['victim_tile']} failed at fleet tick "
+          f"{fo['failed_at_tick']}; replica 0 degraded "
+          f"({str(fo['degraded_reason'])[:60]}...)")
+    print(f"failovers={fo['failovers']} (salvaged={fo['salvaged']}) "
+          f"finished={fo['finished']} failed={fo['failed']} "
+          f"healthy={fo['healthy_replicas']}/2 exact="
+          f"{fo['bit_exact_vs_solo']} drained={fo['drained']}")
+    failover_ok = (
+        fo["failed"] == 0 and fo["failovers"] > 0
+        and fo["bit_exact_vs_solo"] and fo["drained"]
+        and fo["healthy_replicas"] == 1
+    )
+    print(f"failover drained with zero fleet-wide FAILED, solo-exact: "
+          f"{failover_ok}")
+
+    prices = modeled_fleet_price(priced)
+    print("\n== modeled fleet pricing (tacitmap plan) ==")
+    print(f"{'N':>3s} {'tiles':>6s} {'prog_uJ':>8s} {'prog_us':>8s} "
+          f"{'tick_pJ':>9s} {'fleet tok/s':>12s}")
+    for p in prices:
+        print(f"{p.n_replicas:3d} {p.tiles_total:6d} "
+              f"{p.programming_uj:8.2f} {p.programming_us:8.1f} "
+              f"{p.tick_energy_pj:9.1f} {p.fleet_tokens_per_s:12.2e}")
+    base = prices[0]
+    # replication is linear in area/energy, flat in wall-clock
+    scaling_ok = all(
+        p.tiles_total == p.n_replicas * base.tiles_total
+        and abs(p.programming_uj - p.n_replicas * base.programming_uj) < 1e-9
+        and p.programming_us == base.programming_us
+        and abs(p.fleet_tokens_per_s
+                - p.n_replicas * base.fleet_tokens_per_s) < 1e-3
+        for p in prices
+    )
+    print(f"pricing linear in N (tiles, write energy, throughput) with "
+          f"flat wall-clock programming: {scaling_ok}")
+
+    rc = 0 if (exact and prefix_wins and failover_ok and scaling_ok) else 1
+    payload = {
+        "routed": rows,
+        "failover": fo,
+        "modeled": [
+            {k: v for k, v in dataclasses.asdict(p).items() if k != "base"}
+            for p in prices
+        ],
+        "bit_exact_vs_solo": exact,
+        "prefix_beats_round_robin": prefix_wins,
+        "failover_clean": failover_ok,
+        "pricing_linear": scaling_ok,
+    }
+    return rc, payload
+
+
+def main(smoke: bool = False) -> int:
+    return run(smoke=smoke)[0]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
+    raise SystemExit(main(smoke=ap.parse_args().smoke))

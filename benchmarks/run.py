@@ -44,6 +44,12 @@ Sections:
                       probe, mid-serve tile failure -> health-monitor
                       remap onto spares with solo-exact generations +
                       modeled remap cost (``BENCH_faults.json``)
+ 16. fleet         — fleet-serving gate: routed == solo bit-exact across
+                      policy x replica count x engine, prefix routing's
+                      hit rate and prefill saving strictly beat
+                      round-robin on a shared-prefix workload, and a
+                      mid-serve replica degrade fails over with zero
+                      fleet-wide FAILED (``BENCH_fleet.json``)
 
 ``--sections engines`` is an alias for the engine-registry gate
 (kernel_bench + serving_groups); ``--smoke`` shrinks those sections to
@@ -73,6 +79,7 @@ SECTIONS = (
     "scheduler",
     "obs",
     "faults",
+    "fleet",
 )
 
 ALIASES = {"engines": {"kernel_bench", "serving_groups"}}
@@ -123,7 +130,18 @@ def main(argv: list[str] | None = None) -> int:
         help="write section results as JSON (e.g. BENCH_mapping.json) — "
         "structured rows where a section provides them, exit codes otherwise",
     )
+    ap.add_argument(
+        "--list-sections",
+        action="store_true",
+        help="print the known section names (one per line) and exit",
+    )
     args = ap.parse_args(argv)
+    if args.list_sections:
+        for s in SECTIONS:
+            print(s)
+        for alias, expansion in ALIASES.items():
+            print(f"{alias} (= {','.join(sorted(expansion))})")
+        return 0
     wanted = set(SECTIONS) if args.sections == "all" else {
         s.strip() for s in args.sections.split(",") if s.strip()
     }
@@ -132,7 +150,13 @@ def main(argv: list[str] | None = None) -> int:
             wanted = (wanted - {alias}) | expansion
     unknown = wanted - set(SECTIONS)
     if unknown:
-        ap.error(f"unknown sections: {', '.join(sorted(unknown))}")
+        # fail fast WITH the menu: a typo'd section name should not cost
+        # a benchmark run to discover the spelling
+        ap.error(
+            f"unknown sections: {', '.join(sorted(unknown))}; "
+            f"known: {', '.join(SECTIONS)}, "
+            f"aliases: {', '.join(sorted(ALIASES))}"
+        )
 
     import glob
     import json
@@ -155,6 +179,8 @@ def main(argv: list[str] | None = None) -> int:
     from benchmarks import obs as obs_bench
     # aliased: keep the section import style uniform with repro.faults
     from benchmarks import faults as faults_bench
+    # aliased: keep the section import style uniform with repro.fleet
+    from benchmarks import fleet as fleet_bench
 
     rc = 0
     results: dict[str, dict] = {}
@@ -204,6 +230,9 @@ def main(argv: list[str] | None = None) -> int:
     if "faults" in wanted:
         f_rc, payload = faults_bench.run(smoke=args.smoke)
         rc |= record("faults", f_rc, payload)
+    if "fleet" in wanted:
+        fl_rc, payload = fleet_bench.run(smoke=args.smoke)
+        rc |= record("fleet", fl_rc, payload)
 
     if args.out:
         from benchmarks._meta import bench_header

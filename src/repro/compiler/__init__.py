@@ -31,8 +31,10 @@ Module map:
   ``--group-size`` / ``--mapping-policy`` / ``--tile-budget`` argparse
   surface (:func:`add_target_args` / :func:`target_from_args`) plus the
   serve-time scheduler flags (:func:`add_scheduler_args` /
-  :func:`scheduler_from_args`) and the telemetry flags
-  (:func:`add_obs_args` / :func:`obs_from_args`).
+  :func:`scheduler_from_args`), the telemetry flags
+  (:func:`add_obs_args` / :func:`obs_from_args`) and the fleet flags
+  (:func:`add_fleet_args`: ``--replicas`` / ``--routing`` /
+  ``--prefix-block``).
 
 Consumers: ``ServingEngine`` accepts ONLY a :class:`CompiledModel`
 (the PR 5 legacy-kwarg shim was removed in PR 7 — old call sites get a
@@ -48,6 +50,7 @@ is one more target field (``mesh_axis``), not a sixth ad-hoc knob.
 """
 
 from repro.compiler.cli import (  # noqa: F401
+    add_fleet_args,
     add_obs_args,
     add_scheduler_args,
     add_target_args,

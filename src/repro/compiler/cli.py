@@ -164,6 +164,40 @@ def scheduler_from_args(args: argparse.Namespace):
     ).validate()
 
 
+def add_fleet_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Install the fleet-serving flags (PR 10): replica count and
+    routing policy for :class:`repro.fleet.FleetEngine`."""
+    from repro.fleet.router import DEFAULT_BLOCK, ROUTING_POLICIES
+
+    ap.add_argument(
+        "--replicas",
+        type=int,
+        default=1,
+        metavar="N",
+        help="serve from a fleet of N identically-compiled replicas "
+        "behind the prefix-affinity router (1 = plain single-replica "
+        "serving, no fleet layer)",
+    )
+    ap.add_argument(
+        "--routing",
+        default="prefix",
+        choices=ROUTING_POLICIES,
+        help="fleet routing policy: prefix (longest KV-prefix match, "
+        "then load), least-loaded, or round-robin (only with "
+        "--replicas > 1)",
+    )
+    ap.add_argument(
+        "--prefix-block",
+        type=int,
+        default=DEFAULT_BLOCK,
+        metavar="TOKENS",
+        help="token-block width of the router's chained prefix hashes "
+        "(prefix policy only; smaller blocks match shorter shared "
+        "prefixes at more index churn)",
+    )
+    return ap
+
+
 def add_obs_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     """Install the shared telemetry flags (PR 8): either flag turns the
     :mod:`repro.obs` session on for the whole run."""

@@ -650,6 +650,69 @@ def scheduled_decode_tick(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetPrice:
+    """N replicas of one priced target (PR 10 fleet serving).
+
+    Replication on program-once CIM is an AREA trade, not a time one:
+    every replica provisions and programs its own crossbars (tiles and
+    write energy scale linearly), but the replicas program — and then
+    tick — in parallel, so wall-clock programming time stays that of
+    one target while fleet decode throughput scales with the replica
+    count. Break-even stays per-replica: each replica's write pays for
+    itself at the same tick count it would alone.
+    """
+
+    n_replicas: int
+    n_active: int               # serving slots per replica per tick
+    base: Any                   # the single-replica TargetPrice
+    tiles_total: int            # n_replicas x tiles per replica
+    programming_uj: float       # total fleet write energy
+    programming_us: float       # wall-clock (replicas program in parallel)
+    tick_latency_ns: float      # one fleet tick == one replica tick
+    tick_energy_pj: float       # all replicas' ticks summed
+    fleet_tokens_per_s: float   # n_replicas x n_active per tick latency
+    break_even_ticks: float     # per replica — unchanged by replication
+
+    def summary(self) -> str:
+        return (
+            f"[fleet] {self.n_replicas} x {self.base.plan_cost.model} on "
+            f"{self.base.design}: {self.tiles_total} tiles total, program "
+            f"{self.programming_uj:.2f} uJ in {self.programming_us:.1f} us "
+            f"wall; tick {self.tick_latency_ns * 1e-3:.2f} us / "
+            f"{self.tick_energy_pj:.1f} pJ fleet-wide; "
+            f"{self.fleet_tokens_per_s:.2e} tok/s"
+        )
+
+
+def fleet_price(base, n_replicas: int, *, n_active: int = 16) -> FleetPrice:
+    """Price ``n_replicas`` copies of one compiled target.
+
+    ``base`` is the single target's
+    :class:`~repro.compiler.pipeline.TargetPrice` (each replica is an
+    identical program of the same plan). Tiles, programming energy and
+    per-tick energy are linear in the replica count; programming time
+    and tick latency are not (replicas run concurrently).
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    return FleetPrice(
+        n_replicas=n_replicas,
+        n_active=n_active,
+        base=base,
+        tiles_total=n_replicas * base.n_tiles,
+        programming_uj=n_replicas * base.programming_uj,
+        programming_us=base.programming_us,
+        tick_latency_ns=base.tick_latency_ns,
+        tick_energy_pj=n_replicas * base.tick_energy_pj,
+        fleet_tokens_per_s=(
+            n_replicas * n_active
+            / max(base.tick_latency_ns * 1e-9, 1e-18)
+        ),
+        break_even_ticks=base.break_even_ticks,
+    )
+
+
 # ---------------------------------------------------------------------------
 # GPU model
 # ---------------------------------------------------------------------------

@@ -149,3 +149,9 @@ class HealthMonitor:
             "serving engines entering degraded service",
         )
         self.serving.scheduler.degrade(reason)
+        # replica-level signal (PR 10): a fleet pool subscribes here to
+        # mark the replica unhealthy and fail its requests over; FAILED
+        # states keep their snapshots, so the pool can salvage the ones
+        # at or below last_clean_tick
+        if self.serving.on_degrade is not None:
+            self.serving.on_degrade(reason)

@@ -1,0 +1,48 @@
+"""Fleet serving: N replicas of one compiled target behind a
+KV-prefix-affinity router.
+
+The single-replica stack (PR 7/9) ends at one
+:class:`~repro.serving.ServingEngine` with a scheduler and a health
+monitor. This package scales that contract out without changing it:
+
+* :class:`~repro.fleet.replica.Replica` — one ``CompiledModel.serve()``
+  plus per-replica identity, load score and snapshot trust watermark.
+* :class:`~repro.fleet.router.FleetRouter` — token-block hash chains
+  over a two-tier (fleet-global / replica-local) prefix index; policies
+  ``prefix`` | ``least-loaded`` | ``round-robin``.
+* :class:`~repro.fleet.pool.FleetEngine` — the client-facing pool:
+  same ``submit``/``step``/``drain``/``stream`` loop, plus prefix
+  grafting on affinity hits and failover off degraded replicas.
+
+Everything here is semantically invisible: FINISHED generations are
+byte-identical to solo single-replica runs for every policy, replica
+count and engine — including grafted admissions and mid-serve failover.
+"""
+
+from repro.fleet.pool import FleetEngine, FleetRequestState, FleetStats
+from repro.fleet.replica import Replica
+from repro.fleet.router import (
+    DEFAULT_BLOCK,
+    ROUTING_POLICIES,
+    FleetRouter,
+    PrefixEntry,
+    PrefixIndex,
+    RouteDecision,
+    RoutingConfigError,
+    chain_hashes,
+)
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "ROUTING_POLICIES",
+    "FleetEngine",
+    "FleetRequestState",
+    "FleetRouter",
+    "FleetStats",
+    "PrefixEntry",
+    "PrefixIndex",
+    "Replica",
+    "RouteDecision",
+    "RoutingConfigError",
+    "chain_hashes",
+]

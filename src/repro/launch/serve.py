@@ -89,7 +89,11 @@ def _serve_requests(compiled, args, tel=None) -> int:
     )
     tokens = lm_batch(compiled.cfg, args.requests, args.prompt_len,
                       seed=args.seed)["tokens"]
-    rng = np.random.default_rng(args.seed)
+    # the synthetic arrival trace (staggered prompt lengths) draws from
+    # its own seed so load patterns reproduce independently of model
+    # init; it falls back to --seed when unset
+    trace_seed = args.request_seed if args.request_seed is not None else args.seed
+    rng = np.random.default_rng(trace_seed)
     states = []
     t0 = time.time()
     for i in range(args.requests):
@@ -128,6 +132,72 @@ def _serve_requests(compiled, args, tel=None) -> int:
     return 0
 
 
+def _serve_fleet(cfg, params, target, args, tel=None) -> int:
+    """The fleet path (``--replicas > 1``): N identically-compiled
+    replicas behind the prefix-affinity router, driven by the same
+    staggered synthetic request trace as the single-replica scheduler
+    path (one arrival per fleet tick, so the prefix library is live
+    for later arrivals)."""
+    import numpy as np
+
+    from repro import compiler as compiler_lib
+    from repro.data import lm_batch
+    from repro.fleet import FleetEngine
+    from repro.serving import Request
+
+    max_len = args.prompt_len + args.gen
+    fleet = FleetEngine.build(
+        cfg, params, target,
+        n_replicas=args.replicas,
+        max_batch=args.batch,
+        max_len=max_len,
+        scheduler=compiler_lib.scheduler_from_args(args),
+        routing=args.routing,
+        block_size=args.prefix_block,
+    )
+    tokens = lm_batch(cfg, args.requests, args.prompt_len,
+                      seed=args.seed)["tokens"]
+    trace_seed = args.request_seed if args.request_seed is not None else args.seed
+    rng = np.random.default_rng(trace_seed)
+    states = []
+    t0 = time.time()
+    for i in range(args.requests):
+        plen = int(rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1))
+        states.append(fleet.submit(Request(
+            rid=i,
+            prompt=np.asarray(tokens[i, :plen], np.int32),
+            max_new_tokens=args.gen,
+        )))
+        fleet.step()
+    fleet.drain()
+    wall = time.time() - t0
+
+    s = fleet.stats()
+    toks = sum(len(st.generated) for st in states)
+    print(f"[fleet] {s.n_replicas} replica(s) x {args.batch} slot(s), "
+          f"routing={s.routing} (block={args.prefix_block})")
+    print(f"[fleet] drained {args.requests} request(s) in {wall*1e3:.1f} ms "
+          f"({toks / max(wall, 1e-9):.1f} tok/s): finished={s.finished} "
+          f"rejected={s.rejected} expired={s.expired} failed={s.failed}")
+    print(f"[fleet] prefix hits={s.prefix_hits} "
+          f"(rate {s.prefix_hit_rate:.0%}), grafted={s.grafted_tokens} "
+          f"prefilled={s.prefill_tokens} prompt tokens; "
+          f"failovers={s.failovers} (salvaged={s.salvaged}), "
+          f"healthy={s.healthy_replicas}/{s.n_replicas}")
+    per = ", ".join(
+        f"r{i}: {r.ticks}t/{r.decoded}d" for i, r in enumerate(s.replicas)
+    )
+    print(f"[fleet] per-replica ticks/decoded: {per}")
+    print(fleet.price(n_active=args.batch).summary())
+    done = [st for st in states if st.done]
+    if done:
+        head = done[0]
+        print(f"[fleet] rid={head.rid} replica={head.replica} "
+              f"generated[:8] = {head.generated[:8]}")
+    _finish_obs(tel, args)
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     from repro import compiler as compiler_lib
 
@@ -147,10 +217,21 @@ def main(argv: list[str] | None = None) -> int:
         "(staggered prompt lengths, admission control, typed stats) "
         "instead of the lockstep batch loop",
     )
+    ap.add_argument(
+        "--request-seed",
+        type=int,
+        default=None,
+        metavar="SEED",
+        help="seed of the synthetic request trace (staggered prompt "
+        "lengths) alone, so arrival patterns reproduce independently "
+        "of model init; defaults to --seed",
+    )
     # the shared hardware-target surface (engine / K / mapping / prepare)
     compiler_lib.add_target_args(ap)
     # the serve-time scheduler surface (policy / admission / KV reserve)
     compiler_lib.add_scheduler_args(ap)
+    # the fleet surface (--replicas / --routing / --prefix-block)
+    compiler_lib.add_fleet_args(ap)
     # the telemetry surface (--trace-out / --metrics-out)
     compiler_lib.add_obs_args(ap)
     args = ap.parse_args(argv)
@@ -196,6 +277,14 @@ def main(argv: list[str] | None = None) -> int:
             eng = engine_lib.get_engine(target.engine)
             print(f"[serve] engine={eng.name} ({eng.info.description})")
 
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1:
+        if cfg.is_encdec:
+            ap.error("--replicas drives the decoder-only fleet path")
+        if not args.requests:
+            ap.error("--replicas > 1 serves the request path; pass --requests N")
+
     # the telemetry session must be live BEFORE compile() so the
     # pipeline-stage spans (validate/map/resolve/program) are captured
     tel = compiler_lib.obs_from_args(args)
@@ -205,6 +294,10 @@ def main(argv: list[str] | None = None) -> int:
     params = (
         encdec_lib.init_params(key, cfg) if cfg.is_encdec else lm_lib.init_params(key, cfg)
     )
+    if args.replicas > 1:
+        # each replica compiles and programs its own copy of the target
+        # inside FleetEngine.build — skip the solo compile entirely
+        return _serve_fleet(cfg, params, target, args, tel=tel)
     compiled = None
     if not cfg.is_encdec:
         # the one-call pipeline: map (plan) -> resolve (engine) ->

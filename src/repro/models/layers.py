@@ -404,6 +404,64 @@ def attention_block(
     return out, (k, v)
 
 
+def attention_continue(
+    p: Params,
+    x: Array,
+    positions: Array,
+    prefix_k: Array,
+    prefix_v: Array,
+    cfg: ModelConfig,
+    *,
+    quant: str = "none",
+    engine=None,
+) -> tuple[Array, tuple[Array, Array]]:
+    """Prefill continuation over a grafted KV prefix (prefix caching).
+
+    ``x`` holds the suffix positions ``positions`` (absolute, starting
+    at the prefix length); ``prefix_k``/``prefix_v`` are the cached
+    rows for positions ``[0, start)`` taken from an earlier prefill of
+    the same token prefix. Returns (out, (k, v)) where k/v cover only
+    the suffix — the caller concatenates them after the prefix rows.
+
+    Bit-exactness with a from-scratch prefill is load-bearing (the
+    serving prefix-graft invariant) and holds for two reasons:
+
+    * prefill KV rows are prompt-length-invariant — causal masking in
+      :func:`multi_head_attention` zeroes future contributions *exactly*
+      (``p = where(mask, p, 0)``), so a shared prefix's cached rows are
+      bit-identical whatever followed it in the donor prompt;
+    * the suffix runs through the SAME streaming-softmax graph a full
+      prefill uses (not :func:`decode_attention`, whose
+      normalize-then-contract order rounds differently in bf16).
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    qkv = fused_qkv_dense(p, x, cfg, quant, engine)
+    if qkv is None:
+        qkv = (
+            dense(p["q"], x, quant, engine),
+            dense(p["k"], x, quant, engine),
+            dense(p["v"], x, quant, engine),
+        )
+    q = hint(qkv[0].reshape(b, s, cfg.n_heads, hd), "dp", None, "model", None)
+    k = hint(qkv[1].reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    v = hint(qkv[2].reshape(b, s, cfg.n_kv_heads, hd), "dp", None, "model", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # rope returns the input dtype, so cached bf16 prefix rows and the
+    # fresh suffix rows concatenate without a lossy cast
+    k_full = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+    kv_positions = jnp.arange(k_full.shape[1])
+    out = multi_head_attention(
+        q, k_full, v_full, positions, kv_positions, causal=True,
+        chunk=cfg.attn_chunk, impl=cfg.attn_impl,
+    )
+    out = hint(out, "dp", None, "model", None)
+    out = dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), quant, engine)
+    return out, (k, v)
+
+
 def cross_attention_block(
     p: Params,
     x: Array,

@@ -36,6 +36,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import (
     ACT_DTYPE,
     attention_block,
+    attention_continue,
     attention_decode_step,
     attn_init,
     dense,
@@ -392,6 +393,86 @@ def prefill(
         return h2, caches
 
     h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = _head_weights(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32), w)
+    return _mask_padded_vocab(logits, cfg), caches
+
+
+class PrefixContinuationError(ValueError):
+    """``prefill_continue`` was asked to continue a stack it cannot
+    slice at a prefix boundary (SSM/hybrid mixers carry recurrent state,
+    not per-position KV rows) or was given inconsistent caches."""
+
+
+def prefill_continue(
+    params: Params,
+    tokens: Array,
+    prefix_caches: Params,
+    cfg: ModelConfig,
+    engine=None,
+):
+    """Prefill only the suffix of a prompt whose prefix KV is cached.
+
+    ``tokens`` (B, S) are the prompt positions AFTER the shared prefix;
+    ``prefix_caches`` is a prefill-shaped cache pytree (per-layer
+    ``{"k"/"v": (R, B, Lp, KV, D)}``) covering positions ``[0, Lp)`` of
+    the SAME token prefix — typically sliced from an earlier prompt's
+    :func:`prefill` caches. Returns ``(logits, caches)`` exactly like
+    :func:`prefill` over the full prompt: last-position logits and
+    full-prompt-shaped caches (prefix rows concatenated back in), so a
+    serving slot graft is indistinguishable from a from-scratch prefill.
+
+    Bit-exactness vs the full prefill (the serving prefix-graft
+    invariant) follows from :func:`~repro.models.layers
+    .attention_continue`'s two properties: cached prefix rows are
+    prompt-length-invariant, and the suffix runs through the prefill
+    attention graph. Attention-only stacks only — an SSM mixer's
+    recurrent state cannot be cut at a token boundary — and the decoder
+    LM path only (no ``extra_embeds``: VLM prompts prepend frontend
+    embeddings whose positions a token-hash prefix cannot name).
+    """
+    bad = [
+        f"slot{i}" for i, kind in enumerate(cfg.pattern) if kind.mixer != "attn"
+    ]
+    if bad:
+        raise PrefixContinuationError(
+            f"prefix continuation needs per-position KV rows; {cfg.name} "
+            f"has non-attention mixer(s) at {', '.join(bad)} whose "
+            "recurrent state cannot be sliced at a prefix boundary"
+        )
+    start = next(iter(prefix_caches.values()))["k"].shape[2]
+    embeds = embed_tokens(params, tokens)
+    positions = jnp.arange(start, start + tokens.shape[1])
+    h = embeds.astype(ACT_DTYPE)
+    eng = engine if engine is not None else infer_engine(cfg)
+
+    def body(h, xs):
+        slot_p, pre_r = xs
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            sp = slot_p[f"slot{i}"]
+            pk, pv = pre_r[f"slot{i}"]["k"], pre_r[f"slot{i}"]["v"]
+            hn = rms_norm(h, sp["norm1"], cfg.norm_eps)
+            mix, (k, v) = attention_continue(
+                sp["attn"], hn, positions, pk, pv, cfg, quant=cfg.quant,
+                engine=eng,
+            )
+            caches[f"slot{i}"] = {
+                "k": jnp.concatenate([pk, k.astype(ACT_DTYPE)], axis=1),
+                "v": jnp.concatenate([pv, v.astype(ACT_DTYPE)], axis=1),
+            }
+            h = h + mix
+            if _has_ffn(kind, cfg):
+                hn = rms_norm(h, sp["norm2"], cfg.norm_eps)
+                if kind.moe:
+                    f, _ = moe_lib.moe_ffn(sp["moe"], hn, cfg)
+                else:
+                    f = ffn(sp["ffn"], hn, cfg.quant, eng)
+                h = h + f
+        return h, caches
+
+    h, caches = jax.lax.scan(body, h, (params["blocks"], prefix_caches))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     w = _head_weights(params, cfg)
     logits = jnp.einsum("bd,dv->bv", h[:, -1, :].astype(jnp.float32), w)

@@ -1,6 +1,29 @@
 """Batched serving: a request scheduler (admission control, KV budget,
 SLOs, preemption) in front of a slot-pool engine whose decode ticks are
-grouped into WDM-style K-groups."""
+grouped into WDM-style K-groups.
+
+Two entry points, one contract (bit-exact generations):
+
+* **Single replica** — ``CompiledModel.serve()`` returns a
+  :class:`ServingEngine` (slot pool + jitted prefill/decode dispatches)
+  fronted by its :class:`RequestScheduler`; clients drive
+  ``submit``/``step``/``drain``/``stream`` and read typed
+  :class:`ServingStats`. Fault-injecting targets get a
+  :class:`~repro.faults.monitor.HealthMonitor` automatically.
+* **Fleet** — :class:`repro.fleet.FleetEngine` stands up N of those
+  replicas behind a KV-prefix-affinity router and exposes the SAME
+  client loop one level up, adding prefix-grafted admission
+  (:class:`~repro.serving.scheduler.PrefixGraft` rows skip re-prefilling
+  a shared prefix) and failover off degraded replicas. Single-replica
+  serving never pays for the fleet layer — ``repro.fleet`` imports this
+  package, not the other way around.
+
+:class:`SlotSnapshot` is the portability primitive both share: KV rows
+snapshotted on one engine restore bit-exactly into any engine compiled
+from the same :class:`~repro.compiler.HardwareTarget` (prefill rows are
+prompt-length-invariant and cache layouts are target-determined), which
+is what lets the fleet salvage preempted work across replicas.
+"""
 
 from repro.serving.engine import (
     BatchPlanner,
@@ -11,6 +34,7 @@ from repro.serving.engine import (
 )
 from repro.serving.scheduler import (
     DegradedServiceError,
+    PrefixGraft,
     Request,
     RequestRejectedError,
     RequestScheduler,
@@ -28,6 +52,7 @@ __all__ = [
     "DegradedServiceError",
     "GroupPlan",
     "LegacyServingSignatureError",
+    "PrefixGraft",
     "Request",
     "RequestRejectedError",
     "RequestScheduler",

@@ -123,6 +123,8 @@ class ServingStats:
     mmm_groups: int             # K-groups issued to a registry backend
     pad_lanes: int              # idle wavelengths from ragged tails
     prefills: int
+    prefill_tokens: int         # prompt tokens actually prefilled
+    grafted_tokens: int         # prompt tokens elided by prefix grafts
     evictions: int              # preemption snapshots taken
     restores: int               # snapshots grafted back into a slot
     programmed: int             # projections made resident in compile()
@@ -239,8 +241,24 @@ class ServingEngine:
         self.engine_name = compiled.target.engine
         self._counts = {
             "ticks": 0, "decoded": 0, "mmm_groups": 0, "pad_lanes": 0,
-            "prefills": 0, "evictions": 0, "restores": 0,
+            "prefills": 0, "prefill_tokens": 0, "grafted_tokens": 0,
+            "evictions": 0, "restores": 0,
         }
+
+        # prefix grafting (PR 10): a continuation prefill slices cached
+        # KV at a token boundary, which only attention mixers support
+        # (SSM/hybrid state is recurrent) and only the token-prompt path
+        # can hash (VLM prompts prepend frontend embeddings)
+        self.supports_prefix_graft = (
+            all(kind.mixer == "attn" for kind in cfg.pattern)
+            and cfg.frontend != "vision"
+        )
+        # fleet hooks (PR 10): `prefill_observer(state, prompt_rows)` is
+        # called after every prefill with the prompt's batch-squeezed
+        # cache rows (the router's prefix-library feed); `on_degrade`
+        # fires when the health monitor degrades this engine
+        self.prefill_observer = None
+        self.on_degrade = None
 
         self.caches = lm_lib.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)        # next write position
@@ -272,6 +290,13 @@ class ServingEngine:
 
         self._prefill = jax.jit(
             lambda p, t: lm_lib.prefill(p, t, cfg, engine=ex)
+        )
+        # prefix-graft continuation: suffix tokens over donated prefix
+        # rows, returning full-prompt-shaped caches (specializes on the
+        # (prefix_len, suffix_len) pair — block-aligned grafts keep the
+        # shape set small)
+        self._prefill_cont = jax.jit(
+            lambda p, t, pre: lm_lib.prefill_continue(p, t, pre, cfg, engine=ex)
         )
 
         def gathered_decode(p, tok, pos, caches, idx):
@@ -390,19 +415,48 @@ class ServingEngine:
 
     def prefill_into(self, slot: int, st: RequestState) -> None:
         """Run the request's prompt prefill and graft its KV into the
-        slot; emits the first (argmax) token onto the state."""
+        slot; emits the first (argmax) token onto the state.
+
+        A request carrying a :class:`~repro.serving.scheduler
+        .PrefixGraft` (fleet prefix-affinity hit) skips recomputing the
+        shared prefix: the donated rows stand in for positions
+        ``[0, length)`` and only the suffix runs, through
+        ``prefill_continue`` — bit-identical to the full prefill."""
+        plen = st.request.prompt_len
         prompt = jnp.asarray(st.request.prompt, jnp.int32)[None, :]
+        graft = st.request.prefix
+        use_graft = (
+            graft is not None and self.supports_prefix_graft
+            and 0 < graft.length < plen
+        )
         with obs.span(
             "prefill", track="serve", engine=self.engine_name,
-            slot=slot, rid=st.request.rid, prompt_len=st.request.prompt_len,
+            slot=slot, rid=st.request.rid, prompt_len=plen,
+            grafted=graft.length if use_graft else 0,
         ) as sp:
-            logits, pre = self._prefill(self.params, prompt)
-            self._graft(slot, pre, prompt.shape[1])
+            if use_graft:
+                pre_rows = jax.tree.map(
+                    lambda r: r[:, None, : graft.length], graft.rows
+                )
+                logits, pre = self._prefill_cont(
+                    self.params, prompt[:, graft.length:], pre_rows
+                )
+                self._counts["grafted_tokens"] += graft.length
+                self._counts["prefill_tokens"] += plen - graft.length
+            else:
+                logits, pre = self._prefill(self.params, prompt)
+                self._counts["prefill_tokens"] += plen
+            self._graft(slot, pre, plen)
             st.emit(int(jnp.argmax(logits[0])))
             sp.fence(self.caches)
-        self.pos[slot] = st.request.prompt_len
+        self.pos[slot] = plen
         self.tok[slot] = st.generated[-1]
         self._counts["prefills"] += 1
+        if self.prefill_observer is not None:
+            # full-prompt-shaped rows either way (continuation returns
+            # prefix + suffix concatenated) — the fleet prefix library
+            # extends its chains from grafted admissions too
+            self.prefill_observer(st, jax.tree.map(lambda c: c[:, 0], pre))
         if obs.enabled():
             obs.observe(
                 "repro_prefill_latency_seconds", sp.duration_s,

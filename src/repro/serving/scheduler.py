@@ -106,6 +106,25 @@ TERMINAL = (
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefixGraft:
+    """Cached KV rows for a shared prompt prefix (PR 10 fleet routing).
+
+    ``rows`` is a prefill-shaped cache pytree with the batch axis
+    squeezed (attention KV leaves ``(R, L, KV, D)``) covering at least
+    the first ``length`` prompt positions, taken from an earlier
+    prefill of a prompt sharing those tokens. A pool that supports
+    continuation (:meth:`ServingEngine.supports_prefix_graft`) admits
+    the request by prefilling only the suffix — bit-identical to a full
+    prefill, by the ``prefill_continue`` invariant. ``length`` must be
+    strictly below the prompt length: the last prompt position always
+    computes fresh logits for the first emitted token.
+    """
+
+    length: int
+    rows: Any
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class Request:
     """One immutable client submission.
@@ -123,6 +142,10 @@ class Request:
     deadline_ticks: int | None = None   # SLO: ticks from submit to finish
     on_token: Callable[[int, int, int], None] | None = None
     # on_token(rid, token, index) — fired per emitted token, in order
+    prefix: PrefixGraft | None = None   # shared-prefix KV to graft at
+    #                                     admission (fleet router affinity
+    #                                     hit); pools without continuation
+    #                                     support ignore it
 
     @property
     def prompt_len(self) -> int:
@@ -175,6 +198,14 @@ class RequestState:
     @property
     def done(self) -> bool:
         return self.status is RequestStatus.FINISHED
+
+    @property
+    def latency_ticks(self) -> int | None:
+        """End-to-end ticks from submit to the terminal status (None
+        while in flight) — the fleet router's per-replica load signal."""
+        if self.finish_tick is None:
+            return None
+        return self.finish_tick - self.submit_tick
 
     @property
     def terminal(self) -> bool:
@@ -259,6 +290,7 @@ class SchedulerStats:
     kv_committed: int           # tokens held by running requests now
     admission_wait_ticks: float  # mean ticks from submit to first admission
     ticks_to_first_token: float  # mean ticks from submit to first output
+    request_latency_ticks: float  # mean submit->FINISHED ticks (end to end)
 
 
 class RequestScheduler:
@@ -291,6 +323,7 @@ class RequestScheduler:
         self._max_queue_depth = 0
         self._wait_ticks = [0, 0.0]   # [n admitted, total submit->admit ticks]
         self._ttft = [0, 0.0]         # [n first tokens, total ticks]
+        self._latency = [0, 0.0]      # [n finished, total submit->finish ticks]
 
     # -- budget -------------------------------------------------------------
 
@@ -484,6 +517,36 @@ class RequestScheduler:
             yield st.generated[sent]
             sent += 1
 
+    def adopt(
+        self,
+        request: Request,
+        *,
+        generated: "list[int] | tuple[int, ...]" = (),
+        snapshot: SlotSnapshot | None = None,
+    ) -> RequestState:
+        """Enqueue a request that already made progress elsewhere — the
+        fleet failover path (PR 10): a healthy replica adopts a request
+        off a degraded one, carrying the tokens it already streamed and
+        (when the source's clean-tick watermark trusts it) the KV
+        snapshot to resume from. With a snapshot, admission restores the
+        rows instead of prefilling and decode continues bit-exactly;
+        without one the request re-prefills and regenerates the same
+        tokens from scratch. Carried tokens do NOT re-fire ``on_token``
+        (the client already received them)."""
+        st = self.submit(request)
+        if st.status is RequestStatus.REJECTED:
+            return st
+        if generated:
+            st.generated = list(generated)
+        if snapshot is not None:
+            st.snapshot = snapshot
+        return st
+
+    def pending_terminal(self) -> bool:
+        """Terminal states produced outside ``step()`` (mid-tick
+        degrade) waiting to be surfaced by the next ``step()``."""
+        return bool(self._async_terminal)
+
     def stats(self) -> SchedulerStats:
         c = self._counts
         return SchedulerStats(
@@ -511,6 +574,9 @@ class RequestScheduler:
             ),
             ticks_to_first_token=(
                 self._ttft[1] / self._ttft[0] if self._ttft[0] else 0.0
+            ),
+            request_latency_ticks=(
+                self._latency[1] / self._latency[0] if self._latency[0] else 0.0
             ),
         )
 
@@ -605,7 +671,19 @@ class RequestScheduler:
         st.status = status
         st.finish_tick = self.tick_count
         st.committed = 0
-        st.snapshot = None
+        if status is not RequestStatus.FAILED:
+            # FAILED keeps its preemption snapshot: a fleet pool salvages
+            # clean-watermark snapshots off a degraded replica (PR 10)
+            st.snapshot = None
+        latency = self.tick_count - st.submit_tick
+        if status is RequestStatus.FINISHED:
+            self._latency[0] += 1
+            self._latency[1] += latency
+        obs.observe(
+            "repro_request_latency_ticks", latency,
+            "ticks from submit to a terminal status (end-to-end latency)",
+            buckets=obs.TICK_BUCKETS, status=status.value,
+        )
         key = {
             RequestStatus.FINISHED: "finished",
             RequestStatus.EXPIRED: "expired",
